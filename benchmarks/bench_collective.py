@@ -1,0 +1,25 @@
+"""TPU-mapping byte model: CAMR shard_map schedule vs dense ring psum
+(DESIGN.md §3 p2p accounting) across (q, k) and shard widths."""
+
+import time
+
+from repro.core.collective import camr_collective_bytes, make_plan
+
+
+def rows():
+    out = []
+    for q, k, d in [(2, 3, 4096), (4, 3, 4096), (2, 4, 4098), (4, 4, 8193),
+                    (8, 3, 8192)]:
+        t0 = time.perf_counter()
+        plan = make_plan(q, k, d)
+        b = camr_collective_bytes(plan)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append({
+            "name": f"collective_q{q}_k{k}",
+            "us_per_call": us,
+            "derived": (f"K={plan.K} J={plan.J} camr={b['camr_total']}B "
+                        f"ring_psum={b['psum_ring_total']}B "
+                        f"ratio={b['camr_total'] / b['psum_ring_total']:.3f}"
+                        ),
+        })
+    return out

@@ -1,0 +1,44 @@
+"""Fault-tolerance overhead: degraded-mode shuffle load vs healthy.
+
+Not a paper table — it quantifies the recovery protocol DESIGN.md §3
+builds on the paper's placement redundancy (one shuffle-only recovery per
+single failure; the paper's load is the healthy row)."""
+
+import time
+
+import numpy as np
+
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.runtime.fault import DegradedCAMREngine
+
+
+def rows():
+    out = []
+    for q, k, failed in [(2, 3, {0}), (3, 3, {4}), (2, 4, {7}),
+                         (4, 3, {1})]:
+        cfg = CAMRConfig(q=q, k=k, gamma=1)
+        rng = np.random.default_rng(0)
+        dim = 4 * (k - 1)
+        ds = [[rng.standard_normal(dim) for _ in range(cfg.N)]
+              for _ in range(cfg.J)]
+
+        def map_fn(job, sf):
+            return np.outer(np.arange(1, cfg.num_functions() + 1), sf)
+
+        healthy = CAMREngine(cfg, map_fn)
+        healthy.verify(ds, healthy.run(ds))
+        lh = healthy.measured_loads()["L_total_bus"]
+
+        t0 = time.perf_counter()
+        deg = DegradedCAMREngine(cfg, map_fn, failed=failed)
+        deg.run(ds)
+        us = (time.perf_counter() - t0) * 1e6
+        ld = deg.trace.total_bytes() / (
+            cfg.J * cfg.num_functions() * deg.value_bytes)
+        out.append({
+            "name": f"degraded_q{q}_k{k}_f{len(failed)}",
+            "us_per_call": us,
+            "derived": (f"L_healthy={lh:.4f} L_degraded={ld:.4f} "
+                        f"inflation={ld / lh:.2f}x"),
+        })
+    return out

@@ -1,0 +1,22 @@
+"""Paper Table III — minimum job requirement, CAMR vs CCDC (K = 100)."""
+
+import time
+
+from repro.core import loads
+
+
+def rows():
+    out = []
+    for q, k in [(50, 2), (25, 4), (20, 5), (10, 10), (5, 20), (2, 50)]:
+        t0 = time.perf_counter()
+        j_camr = loads.camr_min_jobs(q, k)
+        mu = (k - 1) / (q * k)
+        j_ccdc = loads.ccdc_min_jobs(mu, q * k)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append({
+            "name": f"jobs_K100_muK{k - 1}",
+            "us_per_call": us,
+            "derived": (f"J_CAMR={j_camr} J_CCDC={j_ccdc} "
+                        f"ratio={j_ccdc / j_camr:.1f}x"),
+        })
+    return out

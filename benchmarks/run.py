@@ -1,0 +1,78 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — deliverable (d).
+
+    PYTHONPATH=src python -m benchmarks.run [--only loads,jobs,...]
+
+Tables:
+  loads      — §IV stage loads + §V CAMR==CCDC comparison (measured)
+  jobs       — Table III job minima (K=100)
+  encoding   — §I-A encoding-complexity claim
+  fault      — degraded-mode load inflation (DESIGN.md §3)
+  e2e        — multi-model training integration (paper's DL use case)
+  collective — TPU p2p byte model, CAMR vs ring psum
+  roofline   — §Roofline summary from the dry-run artifacts (if present)
+"""
+
+import argparse
+import sys
+
+
+def _roofline_rows():
+    try:
+        from repro.launch.roofline import table
+        rows = []
+        for r in table():
+            rows.append({
+                "name": f"roofline_{r.arch}_{r.shape}",
+                "us_per_call": r.step_time_s * 1e6,
+                "derived": (f"dom={r.dominant} mfu={r.mfu:.3f} "
+                            f"comp={r.compute_s:.4f}s mem={r.memory_s:.4f}s"
+                            f" coll={r.collective_s:.4f}s "
+                            f"hbm={r.hbm_gib:.1f}GiB"),
+            })
+        return rows or [{"name": "roofline", "us_per_call": 0.0,
+                         "derived": "no dryrun artifacts yet"}]
+    except (FileNotFoundError, OSError):
+        return [{"name": "roofline", "us_per_call": 0.0,
+                 "derived": "no dryrun artifacts (run repro.launch.dryrun)"}]
+
+
+SUITES = {
+    "loads": lambda: __import__("benchmarks.bench_loads",
+                                fromlist=["rows"]).rows(),
+    "jobs": lambda: __import__("benchmarks.bench_jobs",
+                               fromlist=["rows"]).rows(),
+    "encoding": lambda: __import__("benchmarks.bench_encoding",
+                                   fromlist=["rows"]).rows(),
+    "fault": lambda: __import__("benchmarks.bench_fault",
+                                fromlist=["rows"]).rows(),
+    "e2e": lambda: __import__("benchmarks.bench_e2e",
+                              fromlist=["rows"]).rows(),
+    "collective": lambda: __import__("benchmarks.bench_collective",
+                                     fromlist=["rows"]).rows(),
+    "roofline": _roofline_rows,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for n in names:
+        try:
+            for row in SUITES[n]():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{n},nan,\"ERROR: {type(e).__name__}: {e}\"",
+                  flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

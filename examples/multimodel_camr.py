@@ -1,0 +1,52 @@
+"""The paper's deep-learning use case (§I): train J models simultaneously
+with the CAMR-coded gradient shuffle, vs the uncoded baseline.
+
+J = q^{k-1} = 4 small LMs on K = 6 simulated workers. Each worker maps
+the microbatches it stores (redundancy k-1 = 2), aggregates per-batch
+gradients (the compression step), and the 3-stage coded shuffle delivers
+every worker the summed shard it reduces. Identical losses, fewer bytes.
+
+    PYTHONPATH=src python examples/multimodel_camr.py --steps 3
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import loads
+from repro.data.pipeline import ShardedTokenPipeline
+from repro.runtime.train_loop import MultiModelCAMRTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("granite_3_2b")).replace(
+        n_layers=2, vocab=256, d_model=64, d_ff=128, loss_chunk=16)
+    pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=16,
+                                global_batch=4, structure=0.9)
+
+    reports = {}
+    for mode in ("camr", "uncoded"):
+        tr = MultiModelCAMRTrainer(cfg, q=2, k=3, lr=1e-3, seed=0)
+        reports[mode] = tr.train_steps(pipe, args.steps, mode=mode)
+        print(f"{mode:8s}: bytes/run={reports[mode].bytes_total:,} "
+              f"L={reports[mode].loads.get('L_total_bus', 0):.4f} "
+              f"final losses={np.round(reports[mode].losses[-1], 4)}")
+
+    camr, unc = reports["camr"], reports["uncoded"]
+    np.testing.assert_allclose(np.array(camr.losses),
+                               np.array(unc.losses), rtol=1e-4)
+    print(f"\nloss trajectories IDENTICAL; coded shuffle shipped "
+          f"{1 - camr.bytes_total / unc.bytes_total:.1%} fewer bytes "
+          f"(analytic: 1 - {loads.camr_load(2, 3):.2f}/"
+          f"{loads.uncoded_aggregated_load(2, 3):.2f} = "
+          f"{1 - loads.camr_load(2, 3) / loads.uncoded_aggregated_load(2, 3):.1%})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests: prefill + decode loop with
+greedy sampling and per-sequence stopping.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.runtime.serve import generate
+
+
+def main():
+    cfg = reduced(get_config("gemma2_2b"))   # local/global + softcaps
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P, NEW = 4, 12, 16
+    prompts = rng.integers(0, cfg.vocab, (B, P)).astype(np.int32)
+
+    t0 = time.time()
+    res = generate(cfg, params, prompts, max_new=NEW)
+    dt = time.time() - t0
+    print(f"batch={B} prompt={P} new={res.steps} "
+          f"({B * res.steps / dt:.1f} tok/s on CPU)")
+    print("generated token ids:")
+    print(res.tokens[:, P:])
+
+    # consistency: greedy decode must match teacher-forced argmax
+    lg, _ = jax.jit(lambda p, b: lm.prefill(cfg, p, b))(
+        params, {"tokens": res.tokens[:, :P + 1]})
+    want = int(np.argmax(np.asarray(lg[0, -1, :cfg.vocab])))
+    assert want == int(res.tokens[0, P + 1])
+    print("OK (teacher-forcing consistency verified)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+results/dryrun artifacts.
+
+    PYTHONPATH=src python scripts/make_experiments_tables.py
+"""
+
+import json
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+from repro.launch.roofline import (roofline_from_cell, RESULTS_DIR  # noqa
+                                   )
+
+
+def load(arch, shape, mesh, suffix=""):
+    fn = os.path.join(RESULTS_DIR, f"{arch}_{shape}_{mesh}{suffix}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | status | HBM/dev | HLO flops/dev "
+            "(scanned) | collectives | compile |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in ARCHS:
+        for s in SHAPES:
+            for m in ("single", "multipod"):
+                r = load(a, s, m)
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    rows.append(f"| {a} | {s} | {m} | SKIP (see DESIGN.md"
+                                " §6) | — | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    rows.append(f"| {a} | {s} | {m} | ERROR | — | — | — |"
+                                " — |")
+                    continue
+                mem = r["memory"]
+                hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+                       + mem["output_bytes"] - mem["alias_bytes"]) / 2**30
+                flag = " ⚠" if hbm > 16 else ""
+                coll = r["collectives"]["total_bytes"] / 2**30
+                rows.append(
+                    f"| {a} | {s} | {m} | ok | {hbm:.1f} GiB{flag} | "
+                    f"{r['cost']['flops']:.2e} | {coll:.2f} GiB | "
+                    f"{r['compile_s']:.0f}s |")
+    return "\n".join(rows)
+
+
+def roofline_table():
+    rows = ["| arch | shape | comp s | mem s | coll s | dominant | "
+            "step s | MFU | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    worst = []
+    for a in ARCHS:
+        for s in SHAPES:
+            cell = load(a, s, "single")
+            if not cell or cell.get("status") != "ok":
+                continue
+            cost = load(a, s, "single", "_cost")
+            if cost and cost.get("status") != "ok":
+                cost = None
+            r = roofline_from_cell(cell, cost)
+            note = "" if cost else " (scanned, under-counted)"
+            rows.append(
+                f"| {a} | {s} | {r.compute_s:.4f} | {r.memory_s:.4f} | "
+                f"{r.collective_s:.4f} | {r.dominant}{note} | "
+                f"{r.step_time_s:.4f} | {r.mfu:.1%} | "
+                f"{r.useful_flops_ratio:.2f} | "
+                f"{r.roofline_fraction:.2f} |")
+            worst.append((r.roofline_fraction, a, s, r.dominant))
+    worst.sort()
+    summary = ["", "Worst roofline fractions (hillclimb candidates):"]
+    for frac, a, s, dom in worst[:5]:
+        summary.append(f"  - {a} {s}: {frac:.2f} ({dom}-bound)")
+    return "\n".join(rows + summary)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "both"
+    if which in ("dryrun", "both"):
+        print("### Dry-run cells\n")
+        print(dryrun_table())
+    if which in ("roofline", "both"):
+        print("\n### Roofline (single-pod, per §Roofline)\n")
+        print(roofline_table())

@@ -1,0 +1,27 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, MoE 8 experts top-2, sliding-window attention
+[arXiv:2401.04088; hf].
+
+8 experts < the 16-way model axis, so experts are tensor-parallel
+('tp' shard mode: every chip holds a d_ff slice of all 8 experts).
+"""
+
+from repro.configs import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    rope_theta=1e6,
+    window=4096,               # SWA
+    pattern=("attn",),
+    n_experts=8,
+    experts_per_token=2,
+    moe_shard_mode="tp",
+    microbatches=2,
+)

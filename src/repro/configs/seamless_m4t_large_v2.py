@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec, 24L (each side) d_model=1024
+16H (kv=16) d_ff=8192 vocab=256206 [arXiv:2308.11596; hf].
+
+The speech frontend is a STUB per the assignment: ``input_specs``
+provides precomputed 80-dim filterbank frame features; params['front']
+projects them into the encoder. Decoder layers carry cross-attention to
+the encoder memory; decode caches both self and cross K/V."""
+
+from repro.configs import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,               # decoder sublayers
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    pattern=("attn",),
+    frontend="audio",
+    frontend_dim=80,
+)

@@ -1,0 +1,20 @@
+"""Core CAMR library: resolvable designs, placement, coded shuffle, engines."""
+
+from .designs import ResolvableDesign, make_design, factorize_cluster
+from .placement import Placement, make_placement
+from .engine import CAMRConfig, CAMREngine, run_wordcount_example
+from . import loads, shuffle, baselines
+
+__all__ = [
+    "ResolvableDesign",
+    "make_design",
+    "factorize_cluster",
+    "Placement",
+    "make_placement",
+    "CAMRConfig",
+    "CAMREngine",
+    "run_wordcount_example",
+    "loads",
+    "shuffle",
+    "baselines",
+]

@@ -1,0 +1,438 @@
+"""TPU-native CAMR coded shuffle on a JAX mesh axis (shard_map + ppermute).
+
+This is the production counterpart of :mod:`repro.core.engine`: the same
+3-stage schedule, expressed as SPMD collectives on a device axis of size
+``K = k*q``. See DESIGN.md §3 for the multicast -> collective_permute
+mapping and the bus-vs-p2p accounting.
+
+Semantics
+---------
+``J = q**(k-1)`` *jobs* (simultaneously-trained model replicas, or
+gradient-accumulation groups). Each job's gradient is split into ``K``
+function shards of width ``d``; device ``s`` reduces shard ``s`` of every
+job (Q = K). The placement assigns device ``s`` the map work of ``k-1``
+batches for each of its ``q**(k-2)`` owned jobs; its input here is the
+*per-batch gradient aggregates* it computed locally:
+
+    contribs : f32[J_own, k-1, K, d]
+        contribs[a, b] = gradient of batch ``stored_batches[s, a, b]`` of
+        job ``owned_jobs[s, a]``, split into K shards of width d.
+
+Output per device: ``out : [J, d]`` — the fully-aggregated shard ``s`` of
+every job (reduce-scatter semantics, the paper's Reduce phase).
+
+All schedule indices are precomputed on host (numpy) into dense tables
+indexed by device id; inside shard_map they are selected with
+``lax.axis_index``. XOR coding operates on ``uint32`` bitcasts, so
+delivery is bit-exact for any payload.
+
+Notation: for a coded group ``G`` and chunk-owner ``kp`` (the member that
+*misses* the chunk), ``pos(x, kp) = sorted(G \\ {kp}).index(x)`` is the
+packet index Algorithm 2 assigns to member ``x``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+from jax import lax
+
+from .designs import ResolvableDesign, make_design
+from .placement import Placement, make_placement
+
+__all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
+           "camr_shuffle_reference", "uncoded_reduce_scatter",
+           "camr_collective_bytes"]
+
+
+# --------------------------------------------------------------------- #
+# plan
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True, eq=False)
+class CAMRPlan:
+    q: int
+    k: int
+    d: int                       # function-shard width (elements)
+    design: ResolvableDesign = field(repr=False)
+    placement: Placement = field(repr=False)
+    owned_jobs: np.ndarray = field(repr=False)       # [K, J_own]
+    stored_batches: np.ndarray = field(repr=False)   # [K, J_own, k-1]
+    s1_perms: tuple = field(repr=False)              # [J][k-1] perm lists
+    s2_groups: tuple = field(repr=False)
+    s3_perms: tuple = field(repr=False)              # [q-1] perm lists
+
+    @property
+    def K(self) -> int:
+        return self.q * self.k
+
+    @property
+    def J(self) -> int:
+        return self.q ** (self.k - 1)
+
+    @property
+    def J_own(self) -> int:
+        return self.q ** (self.k - 2)
+
+    @property
+    def packet_len(self) -> int:
+        return self.d // (self.k - 1)
+
+
+def make_plan(q: int, k: int, d: int) -> CAMRPlan:
+    """Precompute the full SPMD schedule for a (q, k) CAMR cluster."""
+    if k < 3:
+        # k = 2 degenerates (single-packet chunks, blocks of size 1);
+        # supported by the engine but not worth a coded TPU path.
+        raise ValueError("TPU collective path requires k >= 3")
+    if d % (k - 1):
+        raise ValueError(f"shard width d={d} must be divisible by k-1={k-1}")
+    design = make_design(q, k)
+    pl = make_placement(design, gamma=1)
+    K, J_own = design.K, design.block_size
+
+    owned = np.zeros((K, J_own), dtype=np.int32)
+    stored = np.zeros((K, J_own, k - 1), dtype=np.int32)
+    for s in range(K):
+        jobs = design.owned_jobs(s)
+        for a, j in enumerate(jobs):
+            owned[s, a] = j
+            tmiss = pl.batch_of_label(j, s)
+            stored[s, a] = [t for t in range(k) if t != tmiss]
+
+    s1_perms = []
+    for j in range(design.J):
+        G = design.owners[j]
+        s1_perms.append(tuple(
+            tuple((G[p], G[(p + r) % k]) for p in range(k))
+            for r in range(1, k)))
+
+    s2_groups = []
+    for G in design.stage2_groups():
+        members = []
+        for kp in G:
+            Pset = tuple(s for s in G if s != kp)
+            j = design.common_job(Pset)
+            cls = design.class_of(kp)
+            (l,) = [u for u in design.owners[j] if design.class_of(u) == cls]
+            members.append(dict(server=kp, job=j,
+                                batch=pl.batch_of_label(j, l), classmate=l))
+        rounds = tuple(
+            tuple((G[p], G[(p + r) % k]) for p in range(k))
+            for r in range(1, k))
+        s2_groups.append(dict(group=G, members=tuple(members),
+                              rounds=rounds))
+
+    s3_perms = []
+    for o in range(1, q):
+        pairs = []
+        for i in range(k):
+            for l in range(q):
+                pairs.append((i * q + l, i * q + (l + o) % q))
+        s3_perms.append(tuple(pairs))
+
+    return CAMRPlan(q=q, k=k, d=d, design=design, placement=pl,
+                    owned_jobs=owned, stored_batches=stored,
+                    s1_perms=tuple(s1_perms), s2_groups=tuple(s2_groups),
+                    s3_perms=tuple(s3_perms))
+
+
+# --------------------------------------------------------------------- #
+# bit helpers
+# --------------------------------------------------------------------- #
+def _to_u32(x):
+    if x.dtype == jnp.float32:
+        return lax.bitcast_convert_type(x, jnp.uint32)
+    if x.dtype == jnp.uint32:
+        return x
+    raise TypeError(f"XOR path expects f32/u32, got {x.dtype}")
+
+
+def _from_u32(x, dtype):
+    return lax.bitcast_convert_type(x, dtype) if dtype != jnp.uint32 else x
+
+
+def _xor_reduce(x, axis):
+    return lax.reduce(x, np.uint32(0), lax.bitwise_xor, (axis,))
+
+
+def _coded_exchange(axis_name, u32_chunks, valid, rounds_list,
+                    delta_pos, cancel_pos, cancel_mask,
+                    dec_gather, k, pk):
+    """Shared SPMD machinery of stages 1 and 2 (Algorithm 2 on a mesh axis).
+
+    Parameters (per device; n = number of groups this stage runs):
+      u32_chunks  [n, k, d_u32]   chunk of each group member (0 where the
+                                  member is me or not computable)
+      valid       [n]             True where this device is in group
+      member_pos  [n]             my position in the group (-1 if absent)
+      delta_pos   [n, k]          pos(me, G[p]) for each chunk owner p
+      cancel_pos  [n, k-1, k]     pos(m_r, G[p]) for round r, chunk owner p
+      cancel_mask [n, k-1, k]     True where chunk owner p not in {m_r, me}
+      dec_gather  [n, k-1]        pos(m_r, me): slot of round-r packet in
+                                  my chunk
+    Returns decoded chunks [n, d_u32].
+    """
+    n = u32_chunks.shape[0]
+    packets = u32_chunks.reshape(n, k, k - 1, pk)
+
+    # sender side: Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row is zero)
+    my_pkts = jnp.take_along_axis(
+        packets, delta_pos[:, :, None, None], axis=2)[:, :, 0]  # [n, k, pk]
+    delta = _xor_reduce(my_pkts, axis=1)                        # [n, pk]
+
+    recv = jnp.zeros((n, k - 1, pk), dtype=jnp.uint32)
+    for gi in range(n):
+        payload = jnp.where(valid[gi], delta[gi], 0)
+        for r in range(1, k):
+            got = lax.ppermute(payload, axis_name,
+                               perm=list(rounds_list[gi][r - 1]))
+            recv = recv.at[gi, r - 1].set(jnp.where(valid[gi], got,
+                                                    recv[gi, r - 1]))
+
+    # receiver side: pkt(me, pos(m_r, me)) =
+    #   recv[r] XOR  XOR_{p: G[p] not in {m_r, me}} pkt(G[p], pos(m_r, G[p]))
+    canc = jnp.take_along_axis(
+        packets[:, None].repeat(k - 1, axis=1),       # [n, k-1, k, k-1, pk]
+        cancel_pos[:, :, :, None, None], axis=3)[:, :, :, 0]
+    canc = jnp.where(cancel_mask[:, :, :, None], canc, 0)
+    canc = _xor_reduce(canc, axis=2)                  # [n, k-1, pk]
+    dec = recv ^ canc                                 # [n, k-1, pk]
+    order = jnp.argsort(dec_gather, axis=1)
+    chunk = jnp.take_along_axis(dec, order[:, :, None], axis=1)
+    return chunk.reshape(n, (k - 1) * pk)
+
+
+# --------------------------------------------------------------------- #
+# the SPMD shuffle body (runs inside shard_map over `axis_name`)
+# --------------------------------------------------------------------- #
+def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
+                 axis_name: str, debug: bool = False) -> jnp.ndarray:
+    """3-stage CAMR coded shuffle: contribs [J_own, k-1, K, d] -> [J, d]."""
+    q, k, K, J, J_own, d = (plan.q, plan.k, plan.K, plan.J, plan.J_own,
+                            plan.d)
+    dtype = contribs.dtype
+    if contribs.shape != (J_own, k - 1, K, d):
+        raise ValueError(f"contribs shape {contribs.shape} != "
+                         f"{(J_own, k - 1, K, d)}")
+    me = lax.axis_index(axis_name)
+    pk = plan.packet_len
+    design, pl = plan.design, plan.placement
+    owners = design.owners
+
+    owned_list = [list(plan.owned_jobs[s]) for s in range(K)]
+    stored_list = [[list(plan.stored_batches[s, a])
+                    for a in range(J_own)] for s in range(K)]
+
+    def owned_index(s, j):
+        return owned_list[s].index(j)
+
+    def stored_index(s, j, t):
+        return stored_list[s][owned_index(s, j)].index(t)
+
+    def pos(x, G, kp):
+        return sorted(y for y in G if y != kp).index(x)
+
+    def dev(table):
+        return jnp.take(jnp.asarray(table), me, axis=0)
+
+    u32 = _to_u32(contribs)  # [J_own, k-1, K, d]
+
+    # ================= stage 1: groups = owner sets ==================== #
+    # chunk owner p of group(j) = owners[j][p]; chunk = (batch t_p, shard p)
+    sb = np.zeros((K, J, k), dtype=np.int32)      # local batch idx
+    ss = np.zeros((K, J, k), dtype=np.int32)      # shard id
+    sj = np.zeros((K, J), dtype=np.int32)         # local job idx
+    sv = np.zeros((K, J, k), dtype=bool)
+    s_valid = np.zeros((K, J), dtype=bool)
+    s_mpos = np.zeros((K, J), dtype=np.int32)
+    s_dpos = np.zeros((K, J, k), dtype=np.int32)
+    s_cpos = np.zeros((K, J, k - 1, k), dtype=np.int32)
+    s_cmask = np.zeros((K, J, k - 1, k), dtype=bool)
+    s_dgath = np.zeros((K, J, k - 1), dtype=np.int32)
+    for jidx in range(J):
+        G = owners[jidx]
+        for s in G:
+            s_valid[s, jidx] = True
+            sj[s, jidx] = owned_index(s, jidx)
+            myp = G.index(s)
+            s_mpos[s, jidx] = myp
+            for p, kp in enumerate(G):
+                ss[s, jidx, p] = kp
+                if kp != s:
+                    t = pl.batch_of_label(jidx, kp)
+                    sb[s, jidx, p] = stored_index(s, jidx, t)
+                    sv[s, jidx, p] = True
+                    s_dpos[s, jidx, p] = pos(s, G, kp)
+            for r in range(1, k):
+                m = G[(myp - r) % k]
+                s_dgath[s, jidx, r - 1] = pos(m, G, s)
+                for p, kp in enumerate(G):
+                    if kp not in (m, s):
+                        s_cpos[s, jidx, r - 1, p] = pos(m, G, kp)
+                        s_cmask[s, jidx, r - 1, p] = True
+
+    jb, jsh, jv = dev(sb), dev(ss), dev(sv)
+    jjl = dev(sj)
+    chunks = u32[jjl[:, None], jb, jsh]           # [J, k, d]
+    chunks = jnp.where(jv[:, :, None], chunks, 0)
+    dec1 = _coded_exchange(
+        axis_name, chunks, dev(s_valid),
+        [plan.s1_perms[jidx] for jidx in range(J)],
+        dev(s_dpos), dev(s_cpos), dev(s_cmask), dev(s_dgath), k, pk)
+    stage1_val = _from_u32(dec1, dtype)           # [J, d]; rows valid where
+    #                                               I own job j (my missing
+    #                                               batch aggregate, shard me)
+
+    # ================= stage 2: mixed groups =========================== #
+    n_g = len(plan.s2_groups)
+    gb = np.zeros((K, n_g, k), dtype=np.int32)
+    gjl = np.zeros((K, n_g, k), dtype=np.int32)
+    gsh = np.zeros((K, n_g, k), dtype=np.int32)
+    gv = np.zeros((K, n_g, k), dtype=bool)
+    g_valid = np.zeros((K, n_g), dtype=bool)
+    g_mpos = np.zeros((K, n_g), dtype=np.int32)
+    g_dpos = np.zeros((K, n_g, k), dtype=np.int32)
+    g_cpos = np.zeros((K, n_g, k - 1, k), dtype=np.int32)
+    g_cmask = np.zeros((K, n_g, k - 1, k), dtype=bool)
+    g_dgath = np.zeros((K, n_g, k - 1), dtype=np.int32)
+    for gi, g in enumerate(plan.s2_groups):
+        G = g["group"]
+        for s in G:
+            g_valid[s, gi] = True
+            myp = G.index(s)
+            g_mpos[s, gi] = myp
+            for p, mem in enumerate(g["members"]):
+                kp, j2, t2 = mem["server"], mem["job"], mem["batch"]
+                gsh[s, gi, p] = kp
+                if kp != s:
+                    gjl[s, gi, p] = owned_index(s, j2)
+                    gb[s, gi, p] = stored_index(s, j2, t2)
+                    gv[s, gi, p] = True
+                    g_dpos[s, gi, p] = pos(s, G, kp)
+            for r in range(1, k):
+                m = G[(myp - r) % k]
+                g_dgath[s, gi, r - 1] = pos(m, G, s)
+                for p, kp in enumerate(G):
+                    if kp not in (m, s):
+                        g_cpos[s, gi, r - 1, p] = pos(m, G, kp)
+                        g_cmask[s, gi, r - 1, p] = True
+
+    c2 = u32[dev(gjl), dev(gb), dev(gsh)]         # [n_g, k, d]
+    c2 = jnp.where(dev(gv)[:, :, None], c2, 0)
+    dec2 = _coded_exchange(
+        axis_name, c2, dev(g_valid),
+        [g["rounds"] for g in plan.s2_groups],
+        dev(g_dpos), dev(g_cpos), dev(g_cmask), dev(g_dgath), k, pk)
+    stage2_val = _from_u32(dec2, dtype)           # [n_g, d]
+
+    # ================= stage 3: intra-class unicasts ==================== #
+    cls_base = (me // q) * q
+    s3_out = jnp.zeros((q - 1, J_own, d), dtype=dtype)
+    for o in range(1, q):
+        dst = cls_base + (me % q + o) % q
+        pay = jnp.take(contribs, dst, axis=2).sum(axis=1)   # [J_own, d]
+        got = lax.ppermute(pay, axis_name, perm=list(plan.s3_perms[o - 1]))
+        s3_out = s3_out.at[o - 1].set(got)
+
+    # ================= assemble ======================================== #
+    own_sum = jnp.take(contribs, me, axis=2).sum(axis=1)    # [J_own, d]
+
+    s2_of_job = np.zeros((K, J), dtype=np.int32)
+    s3_off = np.zeros((K, J), dtype=np.int32)
+    is_own = np.zeros((K, J), dtype=bool)
+    own_slot = np.zeros((K, J), dtype=np.int32)
+    s2_lookup = {}
+    for gi, g in enumerate(plan.s2_groups):
+        for mem in g["members"]:
+            s2_lookup[(mem["server"], mem["job"])] = gi
+    for s in range(K):
+        for j in range(J):
+            if design.is_owner(s, j):
+                is_own[s, j] = True
+                own_slot[s, j] = owned_index(s, j)
+            else:
+                cls = design.class_of(s)
+                (l,) = [u for u in owners[j] if design.class_of(u) == cls]
+                # round o delivers from the class-mate at me-o (mod q)
+                s3_off[s, j] = (s - l) % q - 1
+                s2_of_job[s, j] = s2_lookup[(s, j)]
+                own_slot[s, j] = owned_index(l, j)
+
+    d_isown = dev(is_own)
+    d_slot = dev(own_slot)
+    d_s2 = dev(s2_of_job)
+    d_s3 = dev(s3_off)
+
+    owner_val = own_sum[d_slot] + stage1_val      # [J, d] (stage1 is [J, d])
+    s2_sel = stage2_val[d_s2]
+    s3_sel = s3_out[d_s3, d_slot]
+    nonowner_val = s2_sel + s3_sel
+    out = jnp.where(d_isown[:, None], owner_val, nonowner_val)
+    if debug:
+        return dict(out=out, stage1=stage1_val, stage2=s2_sel, stage3=s3_sel,
+                    own_sum=own_sum[d_slot], is_own=d_isown)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# helpers for drivers & tests
+# --------------------------------------------------------------------- #
+def scatter_contributions(plan: CAMRPlan,
+                          batch_grads: np.ndarray) -> np.ndarray:
+    """batch_grads [J, k, K, d] -> per-device contribs [K, J_own, k-1, K, d]
+    per the placement (device s gets the batches it stores)."""
+    K, J_own, k = plan.K, plan.J_own, plan.k
+    out = np.zeros((K, J_own, k - 1, K, plan.d), dtype=batch_grads.dtype)
+    for s in range(K):
+        for a, j in enumerate(plan.owned_jobs[s]):
+            for b, t in enumerate(plan.stored_batches[s, a]):
+                out[s, a, b] = batch_grads[j, t]
+    return out
+
+
+def camr_shuffle_reference(plan: CAMRPlan,
+                           batch_grads: np.ndarray) -> np.ndarray:
+    """Oracle: out[s, j] = sum over batches of shard s of job j."""
+    total = batch_grads.sum(axis=1)               # [J, K, d]
+    return np.transpose(total, (1, 0, 2))         # [K, J, d]
+
+
+def uncoded_reduce_scatter(contribs: jnp.ndarray, *, axis_name: str,
+                           plan: CAMRPlan) -> jnp.ndarray:
+    """Baseline: mask duplicate batch copies, psum, slice my shard."""
+    me = lax.axis_index(axis_name)
+    K, J, J_own = plan.K, plan.J, plan.J_own
+    first = np.zeros((K, J_own, plan.k - 1), dtype=bool)
+    seen = set()
+    for s in range(K):
+        for a, j in enumerate(plan.owned_jobs[s]):
+            for b, t in enumerate(plan.stored_batches[s, a]):
+                if (j, t) not in seen:
+                    seen.add((j, t))
+                    first[s, a, b] = True
+    mask = jnp.take(jnp.asarray(first), me, axis=0)
+    jl = jnp.take(jnp.asarray(plan.owned_jobs), me, axis=0)
+    masked = jnp.where(mask[:, :, None, None], contribs, 0)
+    dense = jnp.zeros((J, K, plan.d), contribs.dtype)
+    dense = dense.at[jl].add(masked.sum(axis=1))
+    total = lax.psum(dense, axis_name)            # [J, K, d]
+    return jnp.take(total, me, axis=1)
+
+
+def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4
+                          ) -> dict[str, int]:
+    """On-wire bytes per device-step of the SPMD schedule (p2p model),
+    for the §Perf comparison against psum-based reduce-scatter."""
+    pk_b = plan.packet_len * itemsize
+    k, q, J, J_own, K, d = (plan.k, plan.q, plan.J, plan.J_own, plan.K,
+                            plan.d)
+    s1 = J * (k - 1) * pk_b * k            # J groups, k-1 rounds, k senders
+    s2 = len(plan.s2_groups) * (k - 1) * pk_b * k
+    s3 = (q - 1) * J_own * d * itemsize * K
+    # uncoded alternative: psum of [J, K, d] dense gradient (ring):
+    ring = 2 * (K - 1) * J * K * d * itemsize
+    return dict(stage1=s1, stage2=s2, stage3=s3,
+                camr_total=s1 + s2 + s3, psum_ring_total=ring)

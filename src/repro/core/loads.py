@@ -1,0 +1,101 @@
+"""Analytic communication loads and job requirements — paper §IV, §V.
+
+All loads are normalized by ``J * Q * B`` (Definition 3). The ``bus`` cost
+model is the paper's shared-multicast-medium model; see
+:mod:`repro.core.shuffle` for the ``p2p`` variant used on TPU ICI.
+"""
+
+from __future__ import annotations
+
+from math import comb
+
+__all__ = [
+    "camr_stage_loads",
+    "camr_load",
+    "camr_load_p2p",
+    "ccdc_load",
+    "ccdc_min_jobs",
+    "camr_min_jobs",
+    "cdc_load",
+    "uncoded_aggregated_load",
+    "uncoded_unit_storage_load",
+    "storage_fraction",
+]
+
+
+def storage_fraction(q: int, k: int) -> float:
+    """mu = (k-1)/K for the CAMR placement."""
+    return (k - 1) / (k * q)
+
+
+def camr_stage_loads(q: int, k: int) -> tuple[float, float, float]:
+    """(L_stage1, L_stage2, L_stage3) — paper §IV."""
+    K = k * q
+    l1 = k / (K * (k - 1))
+    l2 = (q - 1) * k / (K * (k - 1))
+    l3 = (q - 1) / q
+    return l1, l2, l3
+
+
+def camr_load(q: int, k: int) -> float:
+    """L_CAMR = (k(q-1)+1) / (q(k-1)) — paper §IV."""
+    return (k * (q - 1) + 1) / (q * (k - 1))
+
+
+def camr_load_p2p(q: int, k: int) -> float:
+    """CAMR load when a multicast to r receivers costs r transmissions
+    (point-to-point links, e.g. TPU ICI) — DESIGN.md §3.
+
+    Stages 1-2 multicast to k-1 receivers; stage 3 is unicast already.
+    """
+    l1, l2, l3 = camr_stage_loads(q, k)
+    return (k - 1) * (l1 + l2) + l3
+
+
+def camr_min_jobs(q: int, k: int) -> int:
+    """J_CAMR = q^(k-1)."""
+    return q ** (k - 1)
+
+
+def ccdc_load(mu: float, K: int) -> float:
+    """L_CCDC = (1-mu)(mu K + 1) / (mu K) — paper Eq. (6), for mu*K integer."""
+    r = mu * K
+    if abs(r - round(r)) > 1e-9 or not (1 <= round(r) <= K - 1):
+        raise ValueError(f"mu*K must be an integer in [1, K-1], got {r}")
+    r = round(r)
+    return (1 - r / K) * (r + 1) / r
+
+
+def ccdc_min_jobs(mu: float, K: int) -> int:
+    """J_CCDC,min = C(K, mu*K + 1) — paper §V."""
+    r = round(mu * K)
+    return comb(K, r + 1)
+
+
+def cdc_load(r: int, K: int) -> float:
+    """CDC (no aggregation) tradeoff L(r) = (1/r)(1 - r/K) [Li et al. 2018].
+
+    NOTE: normalized by Q*N*B *per job* in the CDC paper (no combining, so
+    every subfile's value crosses the wire); included for context plots.
+    """
+    if not 1 <= r <= K:
+        raise ValueError("r must be in [1, K]")
+    return (1 - r / K) / r
+
+
+def uncoded_aggregated_load(q: int, k: int) -> float:
+    """Uncoded shuffle WITH combiners on the CAMR placement.
+
+    Owners: 1 aggregate (B) per (job, owner) -> J*k*B. Non-owners: no single
+    server stores all N subfiles, so 2 transmissions (one owner sends its
+    k-1 stored batches combined, a second owner sends the remaining batch):
+    J*(K-k)*2B.  L = (2K - k)/K.
+    """
+    K = k * q
+    return (2 * K - k) / K
+
+
+def uncoded_unit_storage_load(K: int) -> float:
+    """No redundancy (mu = 1/K), combiners on: each server sends one
+    aggregate per (job, other reducer): L = (K-1)/K."""
+    return (K - 1) / K

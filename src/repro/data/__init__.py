@@ -1,0 +1,6 @@
+"""Deterministic sharded data pipeline."""
+
+from .pipeline import ShardedTokenPipeline, make_camr_job_datasets, wordcount_corpus
+
+__all__ = ["ShardedTokenPipeline", "make_camr_job_datasets",
+           "wordcount_corpus"]

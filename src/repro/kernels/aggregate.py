@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: the α-combiner (batched segment-sum of map outputs).
+
+The Map phase ends by aggregating intermediate values that share a
+(function, batch) key — the paper's "compression" step that all three
+shuffle stages rely on. On TPU we express the segment-sum as a sequence of
+one-hot matmuls so the MXU does the reduction:
+
+    out[S, d] += onehot(ids_block)^T @ values_block
+
+Tiling: grid (d-blocks, n-blocks) with the n axis innermost so the output
+tile stays resident in VMEM and accumulates across n-blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["aggregate"]
+
+_BLOCK_N = 256
+_BLOCK_D = 512
+
+
+def _agg_kernel(v_ref, ids_ref, o_ref, *, num_segments: int,
+                block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                               # [block_n]
+    onehot = (ids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, num_segments), 1))      # [block_n, S]
+    vals = v_ref[...].astype(jnp.float32)            # [block_n, block_d]
+    o_ref[...] += jax.lax.dot_general(
+        onehot.astype(jnp.float32), vals,
+        (((0,), (0,)), ((), ())),                    # contract over n
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "block_n", "block_d",
+                                    "interpret"))
+def aggregate(values: jnp.ndarray, segment_ids: jnp.ndarray,
+              num_segments: int, *, block_n: int = _BLOCK_N,
+              block_d: int = _BLOCK_D, interpret: bool = True
+              ) -> jnp.ndarray:
+    """Segment-sum ``values: [n, d]`` by ``segment_ids: [n] -> [S, d]``.
+
+    Out-of-range ids (used for padding) contribute nothing.
+    """
+    n, d = values.shape
+    n_pad = -(-n // block_n) * block_n
+    d_pad = -(-d // block_d) * block_d
+    v = jnp.pad(values, ((0, n_pad - n), (0, d_pad - d)))
+    ids = jnp.pad(segment_ids.astype(jnp.int32), (0, n_pad - n),
+                  constant_values=-1)  # -1 never matches the iota
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel, num_segments=num_segments,
+                          block_n=block_n),
+        grid=(d_pad // block_d, n_pad // block_n),
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, block_d),
+                               lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d_pad), jnp.float32),
+        interpret=interpret,
+    )(v, ids)
+    return out[:, :d].astype(values.dtype)

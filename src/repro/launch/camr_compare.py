@@ -1,0 +1,101 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+# ^ before any jax import.
+
+"""§Perf harness: the paper's technique on the wire.
+
+Lowers + compiles THREE gradient-aggregation schedules for the same
+semantic task — deliver the summed gradient shard of each of J jobs to
+its reducer on a K-device axis — and parses the collective bytes from the
+optimized HLO of each:
+
+  camr      the 3-stage coded shuffle (repro.core.collective)
+  uncoded   masked psum + shard slice (same placement, no coding)
+  allreduce dense psum of the [J, K, d] gradient block (what a naive
+            data-parallel trainer ships)
+
+Also reports the analytic byte model (camr_collective_bytes) so the HLO
+parse can be cross-checked.
+
+    PYTHONPATH=src python -m repro.launch.camr_compare --q 4 --k 4 --d 4096
+"""
+
+import argparse
+import functools
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collective import (CAMRPlan, camr_collective_bytes,
+                                   camr_shuffle, make_plan,
+                                   uncoded_reduce_scatter)
+from repro.launch.hlo_stats import collective_stats
+
+
+def lower_schedules(q: int, k: int, d: int) -> dict:
+    plan = make_plan(q, k, d)
+    K, J, J_own = plan.K, plan.J, plan.J_own
+    mesh = jax.make_mesh((K,), ("camr",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    contribs = jax.ShapeDtypeStruct((K, J_own, k - 1, K, d), jnp.float32)
+
+    def _wire(fn):
+        with mesh:
+            compiled = jax.jit(fn).lower(contribs).compile()
+        st = collective_stats(compiled.as_text())
+        return st.wire_bytes, st.count_by_kind
+
+    out = {"q": q, "k": k, "K": K, "J": J, "d": d}
+
+    camr_fn = jax.shard_map(
+        lambda c: camr_shuffle(plan, c[0], axis_name="camr")[None],
+        mesh=mesh, in_specs=P("camr"), out_specs=P("camr"))
+    out["camr_wire"], out["camr_ops"] = _wire(camr_fn)
+
+    unc_fn = jax.shard_map(
+        lambda c: uncoded_reduce_scatter(c[0], axis_name="camr",
+                                         plan=plan)[None],
+        mesh=mesh, in_specs=P("camr"), out_specs=P("camr"))
+    out["uncoded_wire"], out["uncoded_ops"] = _wire(unc_fn)
+
+    def allreduce_fn(c):
+        # dense data-parallel sync: psum the full [J, K, d] grads, then
+        # every device keeps its shard (classic allreduce trainer)
+        me = jax.lax.axis_index("camr")
+        dense = jnp.zeros((J, K, d), jnp.float32)
+        jl = jnp.take(jnp.asarray(plan.owned_jobs), me, axis=0)
+        dense = dense.at[jl].add(c[0].sum(axis=1))
+        total = jax.lax.psum(dense, "camr")
+        return jnp.take(total, me, axis=1)[None]
+
+    ar_fn = jax.shard_map(allreduce_fn, mesh=mesh, in_specs=P("camr"),
+                          out_specs=P("camr"))
+    out["allreduce_wire"], out["allreduce_ops"] = _wire(ar_fn)
+
+    out["analytic"] = camr_collective_bytes(plan)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--d", type=int, default=4096)
+    args = ap.parse_args()
+    res = lower_schedules(args.q, args.k, args.d)
+    print(json.dumps(res, indent=1, default=str))
+    w = {m: res[f"{m}_wire"] for m in ("camr", "uncoded", "allreduce")}
+    base = w["allreduce"]
+    for m, b in w.items():
+        print(f"{m:10s} wire={b / 2**20:9.2f} MiB  "
+              f"({b / base:6.3f}x of allreduce)")
+
+
+if __name__ == "__main__":
+    main()

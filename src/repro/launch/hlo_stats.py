@@ -1,0 +1,92 @@
+"""Parse collective traffic out of optimized HLO text.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but NOT collective
+bytes, so we sum the result-shape sizes of every collective op in the
+optimized module (per-device numbers, since SPMD modules are
+per-device). all-gather results count at full (post-gather) size; the
+per-device on-wire traffic of a ring all-gather of output size S is
+S * (n-1)/n ≈ S, so result size is the right first-order wire proxy;
+all-reduce moves ~2x its buffer in a ring — tracked via per-kind counts
+so the roofline can weight kinds differently.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "collective_stats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result type of an HLO line: `%name = TYPE opname(...)`; TYPE may be a
+# tuple `(f32[...], u32[...])`.
+_LINE = re.compile(
+    r"=\s*(?P<ty>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s*"
+    r"(?P<op>[a-z0-9\-]+)\(")
+_SHAPE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(ty: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(ty):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def wire_bytes(self) -> int:
+        """On-wire estimate: all-reduce rings move ~2x their buffer."""
+        t = 0
+        for kind, b in self.bytes_by_kind.items():
+            t += 2 * b if kind == "all-reduce" else b
+        return t
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by = defaultdict(int)
+    cnt = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # normalize fusions like all-gather-start / all-reduce-done
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-start"):
+                by[kind] += _shape_bytes(m.group("ty"))
+                cnt[kind] += 1
+                break
+    return CollectiveStats(bytes_by_kind=dict(by), count_by_kind=dict(cnt))

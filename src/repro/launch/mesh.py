@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before calling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "mesh_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ('data', 'model') = 256 chips.
+    Multi-pod: (2, 16, 16) ('pod', 'data', 'model') = 512 chips; the
+    'pod' axis carries only data parallelism + cross-pod gradient
+    reduction (DCN-friendly), never layer-internal collectives."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes carrying the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_devices(mesh) -> int:
+    return mesh.devices.size

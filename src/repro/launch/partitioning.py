@@ -1,0 +1,129 @@
+"""Logical-axis partitioning: maps model-level axis names to mesh axes.
+
+Params and activations are annotated with *logical* axes ('embed', 'ffn',
+'heads', 'batch', 'seq', ...); a rule set maps them to mesh axes. The
+launcher activates (mesh, rules) via :func:`axis_rules`; outside that
+context every annotation is a no-op, so models run unchanged on CPU.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# default rule set for the production (16, 16) mesh ('data', 'model'),
+# extended with a leading 'pod' axis for the multi-pod mesh.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("data",),       # data parallel (pod axis prepended if present)
+    "seq": ("model",),        # sequence-parallel residual stream between
+    #                           blocks (Megatron-SP; 16x smaller saved
+    #                           activations — see EXPERIMENTS §Perf)
+    "embed": None,            # residual feature dim replicated over model
+    "fsdp": ("data",),        # parameter FSDP shard
+    "ffn": ("model",),        # tensor parallel
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),    # expert parallel
+    "ssm_in": ("model",),
+    "ssm_heads": ("model",),
+    "seq_kv": ("model",),     # KV-cache sequence dim (flash-decode)
+    "state": None,
+}
+
+
+def no_seq_parallel_rules() -> dict[str, Any]:
+    """Ablation: residual stream replicated over 'model' between blocks
+    (the §Perf baseline-vs-SP comparison)."""
+    rules = dict(DEFAULT_RULES)
+    rules["seq"] = None
+    return rules
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, Any] | None = None,
+               data_axes: tuple[str, ...] = ("data",)):
+    """Activate logical->mesh mapping. ``data_axes`` lets multi-pod meshes
+    map 'batch'/'fsdp' to ('pod', 'data')."""
+    rules = dict(rules or DEFAULT_RULES)
+    if data_axes != ("data",):
+        rules["batch"] = data_axes
+        rules["fsdp"] = ("data",)  # FSDP stays within-pod (DESIGN.md §3)
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_to_spec(axes: tuple) -> P:
+    """Translate a tuple of logical axis names to a PartitionSpec."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    parts = []
+    for ax in axes:
+        r = rules.get(ax) if ax is not None else None
+        if r is None:
+            parts.append(None)
+        else:
+            parts.append(r if len(r) > 1 else r[0])
+    return P(*parts)
+
+
+def constrain(x, axes: tuple):
+    """with_sharding_constraint by logical axes; no-op without a context.
+
+    Axes whose dimension does not divide the mesh axes are dropped
+    (e.g. seq=1 in decode cannot be sequence-parallel)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = logical_to_spec(axes)
+    parts = []
+    for dim, p in zip(x.shape, spec):
+        if p is None:
+            parts.append(None)
+            continue
+        names = p if isinstance(p, tuple) else (p,)
+        n = 1
+        for a in names:
+            n *= mesh.shape[a]
+        parts.append(p if dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def named_sharding(axes: tuple) -> NamedSharding | None:
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return None
+    mesh, _ = ctx
+    return NamedSharding(mesh, logical_to_spec(axes))
+
+
+def tree_shardings(spec_tree, extra_leading: int = 0):
+    """Map a tree of logical-axis tuples to NamedShardings.
+
+    ``extra_leading`` prepends unsharded dims (e.g. the scan/stack axis of
+    layer params)."""
+    def one(axes):
+        if axes is None:
+            return named_sharding(())
+        return named_sharding((None,) * extra_leading + tuple(axes))
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)

@@ -1,0 +1,158 @@
+"""Roofline analysis from the dry-run artifacts — deliverable (g).
+
+Three terms per (arch x shape x mesh), in seconds per step (TPU v5e):
+
+    compute    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective = collective_wire_bytes / (chips x 50e9 B/s ICI per link
+                 x links_used)
+
+HLO numbers come from the trip-true (unrolled) cost pass of
+launch/dryrun.py; collective bytes from the optimized-HLO parse. All
+dry-run numbers are per-device already (SPMD module), so the per-chip
+roofline divides by the peak of ONE chip; `chips` appears only in the
+MODEL_FLOPS utilization line.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link; v5e: 4 links usable per chip
+ICI_LINKS = 4
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # 6*N*D (active params for MoE)
+    hlo_flops_dev: float
+    hbm_gib: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Max-term model (perfect overlap of the other two)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — remat/redundancy waste."""
+        total = self.hlo_flops_dev * self.devices
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        if self.step_time_s == 0:
+            return float("nan")
+        return (self.model_flops
+                / (self.devices * PEAK_FLOPS * self.step_time_s))
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / step_time — 1.0 when compute-bound (the score
+        §Perf pushes up)."""
+        return self.compute_s / self.step_time_s if self.step_time_s else 0
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D for train (fwd+bwd); 2*N*D for inference steps."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def load_cell(arch: str, shape: str, mesh: str, suffix: str = "") -> dict:
+    fn = os.path.join(RESULTS_DIR, f"{arch}_{shape}_{mesh}{suffix}.json")
+    with open(fn) as f:
+        return json.load(f)
+
+
+def roofline_from_cell(cell: dict, cost_cell: dict | None = None
+                       ) -> Roofline:
+    """cell: the scanned dry-run (memory truth); cost_cell: the unrolled
+    cost pass (flops/collective truth; falls back to `cell`)."""
+    cc = cost_cell or cell
+    dev = cell["devices"]
+    flops_dev = cc["cost"]["flops"]
+    bytes_dev = cc["cost"]["bytes_accessed"]
+    wire_dev = cc["collectives"]["wire_bytes"]
+    mem = cell["memory"]
+    hbm = (mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"]
+           - mem["alias_bytes"]) / 2 ** 30
+    return Roofline(
+        arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+        devices=dev,
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=wire_dev / (ICI_BW * ICI_LINKS),
+        model_flops=model_flops(cell["arch"], cell["shape"]),
+        hlo_flops_dev=flops_dev,
+        hbm_gib=hbm,
+    )
+
+
+def table(mesh: str = "single") -> list[Roofline]:
+    out = []
+    for fn in sorted(os.listdir(RESULTS_DIR)):
+        if not fn.endswith(f"_{mesh}.json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, fn)) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        cost = None
+        cfn = os.path.join(RESULTS_DIR, fn.replace(".json", "_cost.json"))
+        if os.path.exists(cfn):
+            with open(cfn) as f:
+                cost = json.load(f)
+            if cost.get("status") != "ok":
+                cost = None
+        out.append(roofline_from_cell(cell, cost))
+    return out
+
+
+def main():
+    rows = table()
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'dom':>10s} {'MFU':>6s} {'useful':>7s} "
+           f"{'HBM':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r.arch:24s} {r.shape:12s} {r.compute_s:8.4f} "
+              f"{r.memory_s:8.4f} {r.collective_s:8.4f} {r.dominant:>10s} "
+              f"{r.mfu:6.1%} {r.useful_flops_ratio:7.2f} "
+              f"{r.hbm_gib:6.1f}G")
+
+
+if __name__ == "__main__":
+    main()

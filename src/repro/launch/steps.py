@@ -1,0 +1,220 @@
+"""Partitioned step builders: jit-ready train/prefill/decode steps with
+NamedShardings derived from the logical-axis spec trees.
+
+Used by launch/train.py, launch/serve.py and launch/dryrun.py (which
+lowers these with ShapeDtypeStruct inputs — deliverable (e)).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeSpec, input_specs
+from repro.launch import partitioning as pt
+from repro.launch.mesh import data_axes
+from repro.models import lm
+from repro.optim import adamw_init, adamw_update
+
+__all__ = ["StepBundle", "build_train_step", "build_decode_step",
+           "build_prefill_step", "build_step"]
+
+
+@dataclass
+class StepBundle:
+    """Everything the launcher/dry-run needs for one (cfg, shape) cell."""
+    fn: Callable                 # jitted
+    args: tuple                  # ShapeDtypeStructs (dry-run) or arrays
+    mesh: Any
+    donate: tuple = ()
+
+
+def _shard(mesh, spec_tree):
+    return pt.tree_shardings(spec_tree)
+
+
+def _sanitize(sh_tree, avals_tree, mesh):
+    """Drop sharding axes that do not divide the dimension (e.g. batch=1
+    in long_500k, kv heads < model axis)."""
+    def one(sh, av):
+        spec = tuple(sh.spec) + (None,) * (len(av.shape) - len(sh.spec))
+        parts = []
+        for dim, p in zip(av.shape, spec):
+            if p is None:
+                parts.append(None)
+                continue
+            names = p if isinstance(p, tuple) else (p,)
+            n = 1
+            for a in names:
+                n *= mesh.shape[a]
+            parts.append(p if dim % n == 0 else None)
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree.map(one, sh_tree, avals_tree)
+
+
+def _batch_axes(mesh, global_batch: int):
+    """Batch partition axes, or None when the batch cannot shard evenly
+    (e.g. long_500k's global_batch=1 -> model-parallel only)."""
+    ba = data_axes(mesh)
+    n = 1
+    for a in ba:
+        n *= mesh.shape[a]
+    if global_batch % n:
+        return None
+    return ba if len(ba) > 1 else ba[0]
+
+
+def _batch_sharding(mesh, batch_specs, global_batch: int):
+    ba = _batch_axes(mesh, global_batch)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(ba, *([None] * (nd - 1))))
+    return jax.tree.map(one, batch_specs)
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeSpec,
+                     lr: float = 3e-4):
+    """train_step(params, opt, batch) -> (params, opt, metrics)."""
+    nmb = cfg.microbatches
+    pspecs_for_grads = lm.param_specs(cfg)
+
+    def _constrain_grads(grads):
+        # pin gradients to the parameter sharding so GSPMD reduce-
+        # scatters them over the FSDP axis instead of all-reducing
+        # (EXPERIMENTS.md §Perf: 4x wire reduction on the grad path).
+        # grad_sync_dtype=bfloat16 casts BEFORE the reduction -> the
+        # wire carries half the bytes (compressed gradient sync).
+        gdt = jnp.dtype(cfg.grad_sync_dtype)
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = jax.tree.leaves(
+            pspecs_for_grads,
+            is_leaf=lambda x: isinstance(x, tuple) or x is None)
+        out = [pt.constrain(g.astype(gdt) if g.dtype == jnp.float32
+                            else g, tuple(s))
+               for g, s in zip(flat_g, flat_s)]
+        return jax.tree.unflatten(tdef, out)
+
+    def train_step(params, opt, batch):
+        def loss_fn(p, mb):
+            return lm.train_loss(cfg, p, mb)[0]
+
+        if nmb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            def split(x):
+                return x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = _constrain_grads(g)
+                return (carry[0] + l,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(
+                acc, zero, mbs, unroll=nmb if cfg.scan_unroll else 1)
+            loss = loss / nmb
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+        params, opt, gnorm = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, {"loss": loss, "gnorm": gnorm}
+
+    pspecs = lm.param_specs(cfg)
+    from repro.optim.adamw import AdamWState
+    with pt.axis_rules(mesh, data_axes=data_axes(mesh)):
+        p_sh = _shard(mesh, pspecs)
+        opt_sh = AdamWState(step=NamedSharding(mesh, P()),
+                            mu=_shard(mesh, pspecs),
+                            nu=_shard(mesh, pspecs))
+        bspecs = input_specs(cfg, shape)["batch"]
+        b_sh = _batch_sharding(mesh, bspecs, shape.global_batch)
+        out_sh = (p_sh, opt_sh, {"loss": NamedSharding(mesh, P()),
+                                 "gnorm": NamedSharding(mesh, P())})
+        fn = jax.jit(
+            _with_rules(train_step, mesh, data_axes(mesh)),
+            in_shardings=(p_sh, opt_sh, b_sh),
+            out_shardings=out_sh,
+            donate_argnums=(0, 1))
+    # argument avals
+    params_avals = jax.eval_shape(
+        functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0))
+    opt_avals = jax.eval_shape(adamw_init, params_avals)
+    return StepBundle(fn=fn, args=(params_avals, opt_avals, bspecs),
+                      mesh=mesh)
+
+
+def _with_rules(f, mesh, daxes):
+    """Re-enter the axis-rules context inside the traced function so
+    constrain() calls in the model resolve (tracing happens at lower())."""
+    @functools.wraps(f)
+    def g(*a, **k):
+        with pt.axis_rules(mesh, data_axes=daxes):
+            return f(*a, **k)
+    return g
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch)
+
+    pspecs = lm.param_specs(cfg)
+    with pt.axis_rules(mesh, data_axes=data_axes(mesh)):
+        p_sh = _shard(mesh, pspecs)
+        spec = input_specs(cfg, shape)
+        b_sh = _batch_sharding(mesh, spec["batch"], shape.global_batch)
+        cache_avals = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = _sanitize(_shard(mesh, lm.cache_specs(cfg)),
+                             cache_avals, mesh)
+        ba = _batch_axes(mesh, shape.global_batch)
+        logits_sh = NamedSharding(mesh, P(ba, None, "model"))
+        fn = jax.jit(_with_rules(prefill_step, mesh, data_axes(mesh)),
+                     in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, cache_sh))
+    params_avals = jax.eval_shape(
+        functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0))
+    return StepBundle(fn=fn, args=(params_avals, spec["batch"]), mesh=mesh)
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    def decode(params, cache, tokens, cache_index):
+        return lm.decode_step(cfg, params, cache, tokens, cache_index)
+
+    pspecs = lm.param_specs(cfg)
+    with pt.axis_rules(mesh, data_axes=data_axes(mesh)):
+        p_sh = _shard(mesh, pspecs)
+        spec = input_specs(cfg, shape)
+        cache_sh = _sanitize(_shard(mesh, lm.cache_specs(cfg)),
+                             spec["cache"], mesh)
+        ba = _batch_axes(mesh, shape.global_batch)
+        tok_sh = NamedSharding(mesh, P(ba, None))
+        idx_sh = NamedSharding(mesh, P())
+        logits_sh = NamedSharding(mesh, P(ba, None, "model"))
+        fn = jax.jit(_with_rules(decode, mesh, data_axes(mesh)),
+                     in_shardings=(p_sh, cache_sh, tok_sh, idx_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+    params_avals = jax.eval_shape(
+        functools.partial(lm.init_params, cfg), jax.random.PRNGKey(0))
+    return StepBundle(
+        fn=fn, args=(params_avals, spec["cache"], spec["tokens"],
+                     spec["cache_index"]), mesh=mesh, donate=(1,))
+
+
+def build_step(cfg: ModelConfig, mesh, shape: ShapeSpec) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, mesh, shape)
+    raise ValueError(shape.kind)

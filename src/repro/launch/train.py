@@ -1,0 +1,64 @@
+"""Training launcher.
+
+On a real TPU pod every host runs this same script (jax.distributed
+initializes from the TPU environment); on CPU it runs a reduced config.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
+        --steps 100 --reduced --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, reduced
+from repro.data.pipeline import ShardedTokenPipeline
+from repro.runtime import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized same-family config")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-sync", choices=["allreduce", "camr"],
+                    default="allreduce")
+    args = ap.parse_args()
+
+    if jax.process_count() > 1:  # multi-host pod
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    cfg = cfg.replace(grad_sync=args.grad_sync)
+    pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
+                                global_batch=args.batch)
+    tr = Trainer(cfg, lr=args.lr, total_steps=args.steps,
+                 ckpt_dir=args.ckpt_dir)
+    if args.resume:
+        if tr.resume():
+            print(f"resumed from step {tr.step}")
+    t0 = time.time()
+    metrics = tr.run(pipe, steps=args.steps, ckpt_every=args.ckpt_every
+                     if args.ckpt_dir else 0)
+    dt = time.time() - t0
+    for m in metrics:
+        print(json.dumps(m))
+    print(f"# {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

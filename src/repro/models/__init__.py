@@ -1,0 +1,4 @@
+"""Model zoo: one composable assembly (lm.py) covering all families."""
+from . import layers, lm
+
+__all__ = ["layers", "lm"]

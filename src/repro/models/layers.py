@@ -1,0 +1,400 @@
+"""Layer primitives shared by all architectures (pure functions on pytrees).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; every init_* has a matching
+  spec_* returning the same structure with *logical axis* tuples used by
+  the partitioner (repro.launch.partitioning).
+* activations: x [B, T, D]; attention uses [B, H, T, Dh] internally.
+* all matmuls accumulate in f32 (preferred_element_type) regardless of the
+  param/activation dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+Params = dict
+Specs = dict
+
+# logical axis names (mapped to mesh axes in launch/partitioning.py).
+# NOTE: the d_model axis of *parameters* is the FSDP shard axis ('fsdp');
+# the 'embed' name is reserved for activations (replicated over model).
+EMBED, FFN, HEADS, KV, VOCAB, EXP, SSM_IN, STATE = (
+    "fsdp", "ffn", "heads", "kv", "vocab", "experts", "ssm_in", "state")
+
+
+# --------------------------------------------------------------------- #
+# basics
+# --------------------------------------------------------------------- #
+def dense(x, w):
+    return lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32
+                           ).astype(x.dtype)
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def rope(x, positions, theta=1e4):
+    """x: [B, H, T, Dh]; positions: [B, T] or [T]."""
+    B, H, T, Dh = x.shape
+    half = Dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freq  # [B,1,T,h]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention (GQA + RoPE + window/softcap), with optional KV cache
+# --------------------------------------------------------------------- #
+def init_attention(key, cfg) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, hq * dh), cfg.dtype) * sc,
+        "wk": jax.random.normal(k2, (d, hkv * dh), cfg.dtype) * sc,
+        "wv": jax.random.normal(k3, (d, hkv * dh), cfg.dtype) * sc,
+        "wo": jax.random.normal(k4, (hq * dh, d), cfg.dtype) * sc,
+    }
+
+
+def spec_attention(cfg) -> Specs:
+    return {"wq": (EMBED, HEADS), "wk": (EMBED, KV), "wv": (EMBED, KV),
+            "wo": (HEADS, EMBED)}
+
+
+def attention_block(p, x, positions, cfg, *, window=None, softcap=None,
+                    causal=True, cache=None, cache_index=None,
+                    memory=None):
+    """Self- (or cross-, when ``memory`` is set) attention.
+
+    cache: optional dict(k=[B, Hkv, Tmax, Dh], v=...) -> returns updated.
+    """
+    B, T, D = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(x, p["wq"]).reshape(B, T, hq, dh).transpose(0, 2, 1, 3)
+    src = x if memory is None else memory
+    Ts = src.shape[1]
+    k = dense(src, p["wk"]).reshape(B, Ts, hkv, dh).transpose(0, 2, 1, 3)
+    v = dense(src, p["wv"]).reshape(B, Ts, hkv, dh).transpose(0, 2, 1, 3)
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    valid_len = None
+    if cache is not None:
+        # write this step's k/v at cache_index; keep the updated cache in
+        # its sharded layout (a resharded DUS would replicate it)
+        from repro.launch.partitioning import constrain as _con
+        kc = lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, 2)
+        vc = lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, 2)
+        kc = _con(kc, ("batch", None, "seq_kv", None))
+        vc = _con(vc, ("batch", None, "seq_kv", None))
+        new_cache = {"k": kc, "v": vc}
+        if T == 1:
+            # decode: attend over the cache up to the current position
+            k, v = kc, vc
+            valid_len = cache_index + T
+        # else prefill: the T tokens just computed ARE the valid keys —
+        # attend over (k, v) directly with the static causal mask (keeps
+        # the O(T) chunked-flash path; the cache write is independent)
+
+    # keep the head axis tensor-parallel through the attention einsums
+    # (constrain drops axes that do not divide, e.g. gemma2's 8 heads)
+    from repro.launch.partitioning import constrain
+    q = constrain(q, ("batch", "heads", None, None))
+    k = constrain(k, ("batch", "heads", None, None))
+    v = constrain(v, ("batch", "heads", None, None))
+    out = ops.attention(q, k, v, causal=causal and memory is None,
+                        window=window, softcap=softcap, valid_len=valid_len,
+                        use_pallas=cfg.use_pallas,
+                        block_q=cfg.attn_block, block_k=cfg.attn_block,
+                        unroll=cfg.scan_unroll)
+    out = constrain(out, ("batch", "heads", None, None))
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, hq * dh)
+    out = dense(out, p["wo"])
+    return (out, new_cache) if cache is not None else (out, None)
+
+
+# --------------------------------------------------------------------- #
+# MLP: SwiGLU / GEGLU
+# --------------------------------------------------------------------- #
+def init_mlp(key, cfg) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), cfg.dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, f), cfg.dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (f, d), cfg.dtype) * f ** -0.5,
+    }
+
+
+def spec_mlp(cfg) -> Specs:
+    return {"w_gate": (EMBED, FFN), "w_up": (EMBED, FFN),
+            "w_down": (FFN, EMBED)}
+
+
+def mlp_block(p, x, cfg):
+    act = jax.nn.gelu if cfg.mlp_act == "geglu" else jax.nn.silu
+    h = act(dense(x, p["w_gate"])) * dense(x, p["w_up"])
+    return dense(h, p["w_down"])
+
+
+# --------------------------------------------------------------------- #
+# MoE (top-k routing, capacity-bounded sort-free dispatch)
+# --------------------------------------------------------------------- #
+def init_moe(key, cfg) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(k1, (d, e), cfg.dtype) * d ** -0.5,
+        "w_gate": jax.random.normal(k2, (e, d, f), cfg.dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k3, (e, d, f), cfg.dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k4, (e, f, d), cfg.dtype) * f ** -0.5,
+    }
+
+
+def spec_moe(cfg) -> Specs:
+    if cfg.moe_shard_mode == "ep":
+        w = (EXP, EMBED, None)
+        wd = (EXP, None, EMBED)
+    else:  # tensor-parallel experts (few big experts, e.g. mixtral)
+        w = (None, EMBED, FFN)
+        wd = (None, FFN, EMBED)
+    return {"router": (EMBED, None), "w_gate": w, "w_up": w, "w_down": wd}
+
+
+def _moe_dispatch_compute(p, xf, cfg, n_model: int = 1,
+                          axis_name: str | None = None,
+                          ep_replicated: bool = False):
+    """Local dispatch + expert FFN on a flat token block [N, D].
+
+    When running manually over a 'model' axis (axis_name set):
+      - 'ep' mode: experts are sharded E/n_model per device; tokens are
+        routed with a bidirectional all_to_all (the classic MoE a2a).
+      - 'ep' + ``ep_replicated`` (tokens identical on every model shard,
+        e.g. decode with T=1): each shard serves only its local experts
+        and the partial token outputs are psum'd — no a2a, no duplicate
+        expert work.
+      - 'tp' mode: every expert's FFN dim is sharded; partial outputs
+        are psum'd over the axis.
+    Tokens beyond an expert's capacity are dropped (GShard behaviour).
+    """
+    N, D = xf.shape
+    E, topk = cfg.n_experts, cfg.experts_per_token
+    logits = dense(xf, p["router"]).astype(jnp.float32)       # [N, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(gates, topk)                           # [N, topk]
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+    cap = int(cfg.moe_capacity_factor * N * topk / E)
+    cap = max(cap, 4)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # [N, topk, E]
+    flat = onehot.reshape(N * topk, E)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    pos = jnp.sum(pos * flat, axis=-1)                        # [N*topk]
+    eidx = idx.reshape(N * topk)
+    keep = pos < cap
+    src = jnp.repeat(xf, topk, axis=0)
+    act = jax.nn.gelu if cfg.mlp_act == "geglu" else jax.nn.silu
+    ep = axis_name is not None and cfg.moe_shard_mode == "ep" \
+        and n_model > 1 and not ep_replicated
+    ep_rep = axis_name is not None and cfg.moe_shard_mode == "ep" \
+        and n_model > 1 and ep_replicated
+    tp = axis_name is not None and cfg.moe_shard_mode == "tp" \
+        and n_model > 1
+
+    if ep_rep:
+        e_loc = E // n_model
+        e0 = lax.axis_index(axis_name) * e_loc
+        mine = keep & (eidx >= e0) & (eidx < e0 + e_loc)
+        e_sel = jnp.where(mine, eidx - e0, e_loc - 1)
+        c_sel = jnp.where(mine, pos, cap - 1)
+        buf = jnp.zeros((e_loc, cap, D), xf.dtype)
+        buf = buf.at[e_sel, c_sel].add(jnp.where(mine[:, None], src, 0))
+    else:
+        e_sel = jnp.where(keep, eidx, E - 1)
+        c_sel = jnp.where(keep, pos, cap - 1)
+        buf = jnp.zeros((E, cap, D), xf.dtype)
+        buf = buf.at[e_sel, c_sel].add(jnp.where(keep[:, None], src, 0))
+        mine = keep
+    if ep:
+        # route tokens to the peers owning each expert block:
+        # [E, cap, D] -> [E/n, n*cap, D] (tiled a2a, self-transposing)
+        buf = lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=1,
+                             tiled=True)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                       preferred_element_type=jnp.float32).astype(xf.dtype))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                       preferred_element_type=jnp.float32).astype(xf.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                       preferred_element_type=jnp.float32).astype(xf.dtype)
+    if ep:
+        # route results back: [E/n, n*cap, D] -> [E, cap, D]
+        out_e = lax.all_to_all(out_e, axis_name, split_axis=1,
+                               concat_axis=0, tiled=True)
+    if tp:
+        out_e = lax.psum(out_e, axis_name)  # FFN-dim partial sums
+
+    got = out_e[e_sel, c_sel]
+    got = jnp.where(mine[:, None], got, 0)
+    wflat = w.reshape(N * topk, 1).astype(xf.dtype)
+    out = jnp.sum((got * wflat).reshape(N, topk, D), axis=1)
+    if ep_rep:
+        out = lax.psum(out, axis_name)     # combine expert-shard partials
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    return out, (me, ce)
+
+
+def moe_block(p, x, cfg):
+    """Top-k MoE. With an active mesh, dispatch runs under shard_map so
+    the scatter/gather stays LOCAL to each token shard (GSPMD cannot
+    partition data-dependent scatters well) and the expert parallelism
+    is an explicit all_to_all ('ep') or psum ('tp') on the model axis."""
+    from repro.launch import partitioning as pt
+    B, T, D = x.shape
+    mesh = pt.current_mesh()
+    E = cfg.n_experts
+    if mesh is None:
+        out, (me, ce) = _moe_dispatch_compute(p, x.reshape(B * T, D), cfg)
+        return out.reshape(B, T, D), E * jnp.sum(me * ce)
+
+    from jax.sharding import PartitionSpec as P
+    ctx_rules = pt._state.ctx[1]
+    daxes = tuple(ctx_rules["batch"])
+    n_data = 1
+    for a in daxes:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape["model"]
+    batch_ax = daxes if B % n_data == 0 else None
+    if batch_ax is not None and len(batch_ax) == 1:
+        batch_ax = batch_ax[0]
+    # EP splits tokens over 'model' (a2a regroups by expert); TP must NOT
+    # (its psum reduces FFN partials of the SAME tokens)
+    seq_ax = "model" if (cfg.moe_shard_mode == "ep"
+                         and T % n_model == 0) else None
+    xs = P(batch_ax, seq_ax, None)
+
+    if cfg.moe_shard_mode == "ep":
+        wspec = {"router": P(None, None), "w_gate": P("model", None, None),
+                 "w_up": P("model", None, None),
+                 "w_down": P("model", None, None)}
+    else:
+        wspec = {"router": P(None, None), "w_gate": P(None, None, "model"),
+                 "w_up": P(None, None, "model"),
+                 "w_down": P(None, "model", None)}
+
+    ep_rep = cfg.moe_shard_mode == "ep" and seq_ax is None
+
+    def body(p_loc, x_loc):
+        b, t, _ = x_loc.shape
+        out, (me, ce) = _moe_dispatch_compute(
+            p_loc, x_loc.reshape(b * t, D), cfg, n_model=n_model,
+            axis_name="model", ep_replicated=ep_rep)
+        # aux loss: global token means FIRST (linear), then the product
+        for ax in ("model",) + tuple(daxes):
+            me, ce = lax.pmean(me, ax), lax.pmean(ce, ax)
+        return out.reshape(b, t, D), E * jnp.sum(me * ce)
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(wspec, xs), out_specs=(xs, P()))(
+        {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")}, x)
+    return out, aux
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 block (SSD core + gating, simplified faithful structure)
+# --------------------------------------------------------------------- #
+def init_ssm(key, cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    S = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, di), cfg.dtype) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (d, di), cfg.dtype) * d ** -0.5,
+        # B/C are group-shared across heads (n_groups=1, as in Mamba2)
+        "w_bc": jax.random.normal(ks[2], (d, 2 * S), cfg.dtype)
+        * d ** -0.5,
+        "w_dt": jax.random.normal(ks[3], (d, H), cfg.dtype) * d ** -0.5,
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "skip": jnp.ones((H,), jnp.float32) * 0.1,   # D residual term
+        "w_out": jax.random.normal(ks[5], (di, d), cfg.dtype) * di ** -0.5,
+    }
+
+
+def spec_ssm(cfg) -> Specs:
+    return {"w_in": (EMBED, SSM_IN), "w_gate": (EMBED, SSM_IN),
+            "w_bc": (EMBED, None), "w_dt": (EMBED, None),
+            "a_log": (None,), "skip": (None,), "w_out": (SSM_IN, EMBED)}
+
+
+def ssm_block(p, x, cfg, *, state=None, return_state=False):
+    """Mamba2 SSD block. state: [B, H, S, P] for decode (returns updated).
+
+    ``return_state`` (prefill): also returns the final state, computed in
+    closed form h_T = sum_s exp(cum_T - cum_s) b_s x_s^T (weights <= 1, so
+    numerically stable for arbitrary T).
+    """
+    B, T, D = x.shape
+    H, S = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_d_inner // H
+    u = dense(x, p["w_in"]).reshape(B, T, H, P)
+    z = dense(x, p["w_gate"])                                  # [B, T, di]
+    bc = dense(x, p["w_bc"])                                   # [B, T, 2S]
+    b, c = bc[..., :S], bc[..., S:]                            # [B, T, S]
+    dt = jax.nn.softplus(dense(x, p["w_dt"]).astype(jnp.float32))  # [B,T,H]
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt               # log-decay <0
+    xin = u * dt[..., None].astype(u.dtype)
+
+    if state is None:
+        y = ops.ssd(xin, a, b, c, use_pallas=cfg.use_pallas,
+                    chunk=cfg.ssm_chunk, unroll=cfg.scan_unroll)
+        new_state = None
+        if return_state:
+            cum = jnp.cumsum(a, axis=1)                        # [B, T, H]
+            w = jnp.exp(cum[:, -1:, :] - cum)                  # [B, T, H]
+            new_state = jnp.einsum(
+                "bth,bts,bthp->bhsp", w,
+                b.astype(jnp.float32), xin.astype(jnp.float32))
+    else:
+        # single-step recurrence (T == 1)
+        at = jnp.exp(a[:, 0]).astype(jnp.float32)              # [B, H]
+        st = state * at[..., None, None] + jnp.einsum(
+            "bs,bhp->bhsp", b[:, 0].astype(jnp.float32),
+            xin[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bs,bhsp->bhp", c[:, 0].astype(jnp.float32),
+                       st)[:, None].astype(x.dtype)
+        new_state = st
+    y = y + xin * p["skip"][None, None, :, None].astype(u.dtype)
+    y = y.reshape(B, T, H * P) * jax.nn.silu(z)
+    return dense(y, p["w_out"]), new_state

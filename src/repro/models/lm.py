@@ -1,0 +1,468 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / enc-dec LMs.
+
+One code path serves all ten assigned architectures, driven by
+``ModelConfig.pattern`` (the repeating sublayer unit) with ``lax.scan``
+over the ``repeats`` axis and optional per-unit remat. Entry points:
+
+    init_params(cfg, key)                  -> params pytree
+    param_specs(cfg)                       -> matching logical-axis pytree
+    train_loss(cfg, params, batch)         -> (loss, metrics)
+    prefill(cfg, params, batch)            -> (last_logits, cache)
+    init_cache(cfg, B, T)                  -> zeroed cache pytree
+    decode_step(cfg, params, cache, tokens, cache_index)
+                                           -> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ModelConfig
+from repro.launch.partitioning import constrain
+from . import layers as L
+
+Params = Any
+
+
+# --------------------------------------------------------------------- #
+# structure helpers
+# --------------------------------------------------------------------- #
+def slot_names(cfg: ModelConfig) -> list[str]:
+    return [f"{i}_{kind}" for i, kind in enumerate(cfg.pattern)]
+
+
+def _init_slot(key, cfg, kind: str) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((d,), jnp.float32)
+    if kind in ("attn", "local", "shared_attn"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"norm1": z, "attn": L.init_attention(k1, cfg), "norm2": z}
+        if cfg.n_experts:
+            p["moe"] = L.init_moe(k2, cfg)
+        else:
+            p["mlp"] = L.init_mlp(k2, cfg)
+        if cfg.family == "encdec" and kind == "attn":
+            p["norm_x"] = z
+            p["cross"] = L.init_attention(k3, cfg)
+        return p
+    if kind == "ssm":
+        return {"norm": z, "ssm": L.init_ssm(key, cfg)}
+    raise ValueError(f"unknown sublayer kind {kind!r}")
+
+
+def _spec_slot(cfg, kind: str) -> Any:
+    if kind in ("attn", "local", "shared_attn"):
+        p = {"norm1": (None,), "attn": L.spec_attention(cfg),
+             "norm2": (None,)}
+        if cfg.n_experts:
+            p["moe"] = L.spec_moe(cfg)
+        else:
+            p["mlp"] = L.spec_mlp(cfg)
+        if cfg.family == "encdec" and kind == "attn":
+            p["norm_x"] = (None,)
+            p["cross"] = L.spec_attention(cfg)
+        return p
+    if kind == "ssm":
+        return {"norm": (None,), "ssm": L.spec_ssm(cfg)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_padded
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (V, d), cfg.jdtype) * d ** -0.5,
+        "norm_f": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["out"] = jax.random.normal(keys[1], (d, V),
+                                          cfg.jdtype) * d ** -0.5
+    blocks = {}
+    for i, (name, kind) in enumerate(zip(slot_names(cfg), cfg.pattern)):
+        if kind == "shared_attn":
+            continue  # lives in params['shared']
+        sub = jax.random.split(jax.random.fold_in(keys[2], i), cfg.repeats)
+        blocks[name] = jax.vmap(
+            lambda k: _init_slot(k, cfg, kind))(sub)
+    params["blocks"] = blocks
+    if "shared_attn" in cfg.pattern:
+        params["shared"] = _init_slot(keys[3], cfg, "shared_attn")
+    if cfg.n_enc_layers:
+        enc_cfg = cfg
+        sub = jax.random.split(keys[4], cfg.n_enc_layers)
+        params["enc"] = {
+            "blocks": jax.vmap(
+                lambda k: _init_slot(k, enc_cfg, "attn")
+                if cfg.family != "encdec"
+                else {kk: vv for kk, vv in _init_slot(
+                    k, enc_cfg.replace(family="dense"), "attn").items()}
+            )(sub),
+            "norm": jnp.zeros((d,), jnp.float32),
+        }
+    if cfg.frontend:
+        params["front"] = {
+            "w": jax.random.normal(keys[5], (cfg.frontend_dim, d),
+                                   cfg.jdtype) * cfg.frontend_dim ** -0.5}
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    specs: dict = {"embed": (L.VOCAB, L.EMBED), "norm_f": (None,)}
+    if not cfg.tie_embeddings:
+        specs["out"] = (L.EMBED, L.VOCAB)
+    blocks = {}
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        if kind == "shared_attn":
+            continue
+        # leading scan axis is unsharded -> prepend None
+        blocks[name] = jax.tree.map(
+            lambda ax: (None,) + tuple(ax), _spec_slot(cfg, kind),
+            is_leaf=lambda x: isinstance(x, tuple))
+    specs["blocks"] = blocks
+    if "shared_attn" in cfg.pattern:
+        specs["shared"] = _spec_slot(cfg, "shared_attn")
+    if cfg.n_enc_layers:
+        specs["enc"] = {
+            "blocks": jax.tree.map(
+                lambda ax: (None,) + tuple(ax),
+                _spec_slot(cfg.replace(family="dense"), "attn"),
+                is_leaf=lambda x: isinstance(x, tuple)),
+            "norm": (None,),
+        }
+    if cfg.frontend:
+        specs["front"] = {"w": (None, L.EMBED)}
+    return specs
+
+
+# --------------------------------------------------------------------- #
+# sublayer application
+# --------------------------------------------------------------------- #
+def _apply_slot(cfg, kind, p, x, positions, *, memory=None, cache=None,
+                cache_index=None, mode="train"):
+    """Returns (x, new_cache_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    sp = ("batch", "seq", "embed")  # sequence-parallel residual layout
+    if kind in ("attn", "local", "shared_attn"):
+        window = cfg.local_window if kind == "local" else cfg.window
+        h = L.rms_norm(x, p["norm1"])
+        attn_cache = cache.get("self") if cache else None
+        h, new_self = L.attention_block(
+            p["attn"], h, positions, cfg, window=window,
+            softcap=cfg.attn_softcap, causal=(mode != "encoder"),
+            cache=attn_cache, cache_index=cache_index)
+        # reduce-scatter the row-parallel output into the SP layout
+        x = x + constrain(h, sp)
+        if cfg.family == "encdec" and kind == "attn" and mode != "encoder":
+            h = L.rms_norm(x, p["norm_x"])
+            if cache is not None and "cross" in cache:
+                # decode: attend to the prefilled cross k/v directly
+                ck = cache["cross"]
+                B = x.shape[0]
+                q = L.dense(h, p["cross"]["wq"]).reshape(
+                    B, x.shape[1], cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+                from repro.kernels import ops
+                o = ops.attention(q, ck["k"], ck["v"], causal=False,
+                                  use_pallas=cfg.use_pallas)
+                o = o.transpose(0, 2, 1, 3).reshape(B, x.shape[1], -1)
+                h = L.dense(o, p["cross"]["wo"])
+                new_cross = ck
+            else:
+                h, _ = L.attention_block(p["cross"], h, positions, cfg,
+                                         causal=False, memory=memory)
+                new_cross = None
+            x = x + constrain(h, sp)
+        else:
+            new_cross = None
+        h = L.rms_norm(x, p["norm2"])
+        if cfg.n_experts:
+            h, aux = L.moe_block(p["moe"], h, cfg)
+        else:
+            h = L.mlp_block(p["mlp"], h, cfg)
+        x = x + constrain(h, sp)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": new_self}
+            if new_cross is not None:
+                new_cache["cross"] = new_cross
+        return x, new_cache, aux
+    if kind == "ssm":
+        h = L.rms_norm(x, p["norm"])
+        if mode == "prefill":
+            h, new_state = L.ssm_block(p["ssm"], h, cfg, state=None,
+                                       return_state=True)
+            new_cache = {"state": new_state}
+        else:
+            state = cache.get("state") if cache else None
+            h, new_state = L.ssm_block(p["ssm"], h, cfg, state=state)
+            new_cache = {"state": new_state} if cache is not None else None
+        return x + constrain(h, sp), new_cache, aux
+    raise ValueError(kind)
+
+
+def _unit(cfg, params, shared, x, positions, *, cache=None,
+          cache_index=None, mode="train"):
+    """Apply one repetition of the pattern. cache: dict slot->entry."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        p = shared if kind == "shared_attn" else params[name]
+        c = cache.get(name) if cache is not None else None
+        x, nc, a = _apply_slot(cfg, kind, p, x, positions, cache=c,
+                               cache_index=cache_index, mode=mode)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache[name] = nc
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def _scan_units(cfg, params, x, positions, *, cache=None, cache_index=None,
+                mode="train"):
+    """lax.scan over the pattern repetitions, optional per-unit remat."""
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x, aux = carry
+        blk, cache_sl = xs
+        x, new_c, a = _unit(cfg, blk, shared, x, positions, cache=cache_sl,
+                            cache_index=cache_index, mode=mode)
+        return (x, aux + a), new_c
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, aux), new_cache = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], cache),
+        unroll=cfg.repeats if cfg.scan_unroll else 1)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------- #
+# embedding / logits / loss
+# --------------------------------------------------------------------- #
+def _embed(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.frontend == "vit":
+        patches = L.dense(batch["patches"], params["front"]["w"])
+        pl_ = patches.shape[1]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, pl_:]], axis=1)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x
+
+
+def _encoder(cfg, params, frames):
+    """Bidirectional encoder over (stub-projected) frame features."""
+    x = L.dense(frames, params["front"]["w"])
+    positions = jnp.arange(x.shape[1])
+    shared = None
+
+    def body(carry, blk):
+        h, _ = carry
+        h, _, _ = _unit(cfg.replace(pattern=("attn",), family="dense"),
+                        {"0_attn": blk}, shared, h, positions,
+                        mode="encoder")
+        return (h, jnp.zeros(())), None
+
+    bodyf = jax.checkpoint(body) if cfg.remat == "block" else body
+    (x, _), _ = lax.scan(bodyf, (x, jnp.zeros(())),
+                         params["enc"]["blocks"],
+                         unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return L.rms_norm(x, params["enc"]["norm"])
+
+
+def _logits(cfg, params, x):
+    out_w = params["embed"].T if cfg.tie_embeddings else params["out"]
+    lg = L.dense(x, out_w).astype(jnp.float32)
+    if cfg.final_softcap:
+        lg = cfg.final_softcap * jnp.tanh(lg / cfg.final_softcap)
+    return lg
+
+
+def _chunked_loss(cfg, params, x, labels):
+    """Cross-entropy with seq-chunked logits (memory: O(chunk * vocab))."""
+    B, T, D = x.shape
+    C = min(cfg.loss_chunk, T)
+    assert T % C == 0
+    xc = x.reshape(B, T // C, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, T // C, C).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        xi, li = xs
+        lg = _logits(cfg, params, xi)
+        # sharding-friendly: mask vocab padding (no uneven slice), gold
+        # logit via one-hot contraction (no cross-shard gather) — both
+        # keep the vocab axis sharded; only [B, C] scalars cross shards.
+        vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape,
+                                             lg.ndim - 1)
+        lg = jnp.where(vocab_ids < cfg.vocab, lg, -1e30)
+        valid = li >= 0
+        li = jnp.maximum(li, 0)
+        m = jnp.max(lg, axis=-1)
+        lse = m + jnp.log(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1))
+        gold = jnp.sum(jnp.where(vocab_ids == li[..., None], lg, 0.0),
+                       axis=-1)
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    # remat the chunk: recompute the [B, C, vocab] logits in the backward
+    # instead of saving them (vocab-sized activations dominate otherwise)
+    chunk_fn = jax.checkpoint(chunk) if cfg.remat == "block" else chunk
+    (tot, cnt), _ = lax.scan(chunk_fn, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)),
+                             (xc, lc),
+                             unroll=(T // C) if cfg.scan_unroll else 1)
+    return tot / jnp.maximum(cnt, 1)
+
+
+# --------------------------------------------------------------------- #
+# public entry points
+# --------------------------------------------------------------------- #
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: tokens, labels (+ patches/frames for vlm/audio)."""
+    if cfg.family == "encdec":
+        memory = _encoder(cfg, params, batch["frames"])
+        x = _embed(cfg, params, batch)
+        positions = jnp.arange(x.shape[1])
+
+        # decoder units need the encoder memory for cross-attention: close
+        # over it (memory is an invariant of the scan).
+        def body_mem(carry, blk):
+            h, aux = carry
+            h2 = h
+            for name, kind in zip(slot_names(cfg), cfg.pattern):
+                h2, _, a = _apply_slot(cfg, kind, blk[name], h2, positions,
+                                       memory=memory, mode="train")
+                aux = aux + a
+            h2 = constrain(h2, ("batch", "seq", "embed"))
+            return (h2, aux), None
+
+        bodyf = jax.checkpoint(body_mem) if cfg.remat == "block" \
+            else body_mem
+        (x, aux), _ = lax.scan(bodyf, (x, jnp.zeros(())), params["blocks"],
+                               unroll=cfg.repeats if cfg.scan_unroll else 1)
+    else:
+        x = _embed(cfg, params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = _scan_units(cfg, params, x, positions, mode="train")
+    x = L.rms_norm(x, params["norm_f"])
+    loss = _chunked_loss(cfg, params, x, batch["labels"])
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"loss": loss, "moe_aux": aux}
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int):
+    """Zeroed decode cache (also the dry-run ShapeDtypeStruct template)."""
+    R, hkv, hd = cfg.repeats, cfg.n_kv_heads, cfg.hd
+    cache = {}
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        if kind in ("attn", "local", "shared_attn"):
+            ent = {"self": {
+                "k": jnp.zeros((R, B, hkv, T, hd), cfg.jdtype),
+                "v": jnp.zeros((R, B, hkv, T, hd), cfg.jdtype)}}
+            if cfg.family == "encdec" and kind == "attn":
+                ent["cross"] = {
+                    "k": jnp.zeros((R, B, hkv, T, hd), cfg.jdtype),
+                    "v": jnp.zeros((R, B, hkv, T, hd), cfg.jdtype)}
+            cache[name] = ent
+        elif kind == "ssm":
+            P = cfg.ssm_d_inner // cfg.ssm_heads
+            cache[name] = {"state": jnp.zeros(
+                (R, B, cfg.ssm_heads, cfg.ssm_state, P), jnp.float32)}
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical axes for the cache: batch over data, cache SEQUENCE over
+    model (flash-decode style — kv-head counts are often < the model
+    axis, the sequence always divides it)."""
+    spec = {}
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        if kind in ("attn", "local", "shared_attn"):
+            kv = {"k": (None, "batch", None, "seq_kv", None),
+                  "v": (None, "batch", None, "seq_kv", None)}
+            ent = {"self": kv}
+            if cfg.family == "encdec" and kind == "attn":
+                ent["cross"] = dict(kv)
+            spec[name] = ent
+        elif kind == "ssm":
+            spec[name] = {"state": (None, "batch", "ssm_heads", None,
+                                    None)}
+    return spec
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int | None = None):
+    """Forward pass that also writes the KV/state caches.
+
+    Implemented as decode-mode scan with T-length writes at index 0.
+    ``max_len`` sizes the cache for subsequent decode_step calls."""
+    x = _embed(cfg, params, batch)
+    B, T = x.shape[:2]
+    positions = jnp.arange(T)
+    cache = init_cache(cfg, B, max_len or T)
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encoder(cfg, params, batch["frames"])
+        # fill cross k/v once per layer below via _apply_slot(memory=...)
+    x, new_cache, _ = _prefill_scan(cfg, params, x, positions, cache,
+                                    memory)
+    x = L.rms_norm(x, params["norm_f"])
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, new_cache
+
+
+def _prefill_scan(cfg, params, x, positions, cache, memory):
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        h = carry
+        blk, cache_sl = xs
+        new_c = {}
+        for name, kind in zip(slot_names(cfg), cfg.pattern):
+            p = shared if kind == "shared_attn" else blk[name]
+            c = cache_sl.get(name)
+            if kind in ("attn", "local", "shared_attn"):
+                h, nc, _ = _apply_slot(
+                    cfg, kind, p, h, positions, memory=memory,
+                    cache={"self": c["self"]},
+                    cache_index=jnp.zeros((), jnp.int32), mode="prefill")
+                if cfg.family == "encdec" and kind == "attn":
+                    # fill the cross k/v cache from the encoder memory
+                    B, Ts = memory.shape[:2]
+                    kx = L.dense(memory, p["cross"]["wk"]).reshape(
+                        B, Ts, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+                    vx = L.dense(memory, p["cross"]["wv"]).reshape(
+                        B, Ts, cfg.n_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+                    nc["cross"] = {"k": kx, "v": vx}
+            else:
+                h, nc, _ = _apply_slot(cfg, kind, p, h, positions,
+                                       cache=None, mode="prefill")
+            new_c[name] = nc
+        h = constrain(h, ("batch", "seq", "embed"))
+        return h, new_c
+
+    bodyf = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, new_cache = lax.scan(bodyf, x, (params["blocks"], cache),
+                            unroll=cfg.repeats if cfg.scan_unroll else 1)
+    return x, new_cache, None
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, cache_index):
+    """One serving step: tokens [B, 1] + cache -> logits [B, 1, V]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_index, jnp.int32)
+    x, new_cache, _ = _scan_units(cfg, params, x, positions, cache=cache,
+                                  cache_index=cache_index, mode="decode")
+    x = L.rms_norm(x, params["norm_f"])
+    return _logits(cfg, params, x), new_cache

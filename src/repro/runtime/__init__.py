@@ -1,0 +1,6 @@
+"""Distributed runtime: training loops, fault tolerance, serving."""
+
+from .train_loop import Trainer, MultiModelCAMRTrainer
+from . import fault, serve
+
+__all__ = ["Trainer", "MultiModelCAMRTrainer", "fault", "serve"]

@@ -1,0 +1,277 @@
+"""Fault tolerance built ON the paper's redundancy.
+
+The CAMR placement stores every batch on k-1 servers (computation
+redundancy) — the same structure that buys the coded-shuffle savings also
+makes single-server loss recoverable WITHOUT recomputation:
+
+* stage 1/2 groups containing a failed server: its coded broadcast Δ is
+  gone, but every packet Δ would have covered is known by other live
+  group members (the Lemma-2 storage condition) — each receiver fetches
+  its missing packet uncoded from any live holder.
+* stage-3 unicasts from a failed sender: the k-1 batches it would have
+  aggregated are each stored on other owners of the job; the receiver
+  collects them (at most k-1 uncoded values instead of 1).
+* the failed server's reduce functions are reassigned to live servers
+  (function migration), which then also receive the values the failed
+  server would have decoded.
+
+:class:`DegradedCAMREngine` executes exactly this protocol and reports
+the load inflation; the straggler path is identical (a straggler is a
+failure with a deadline). Elastic re-planning rebuilds the design for a
+new K and quantifies data movement.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.designs import factorize_cluster, make_design
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.placement import make_placement
+from repro.core.shuffle import Transmission
+
+__all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport"]
+
+
+class DegradedCAMREngine(CAMREngine):
+    """CAMR engine that survives a set of failed/straggling servers.
+
+    ``failed`` servers complete the Map phase but are silent in the
+    Shuffle (crash or deadline-miss after map). Their reduce functions
+    are migrated to the next live server in their parallel class.
+    """
+
+    def __init__(self, cfg: CAMRConfig, map_fn, failed: set[int],
+                 **kw):
+        super().__init__(cfg, map_fn, **kw)
+        self.failed = set(failed)
+        if cfg.k < 3:
+            raise ValueError("degraded recovery requires k >= 3 (k = 2 "
+                             "leaves single-holder batches)")
+        for i in range(cfg.k):
+            cls = set(self.design.parallel_class(i))
+            if len(cls & self.failed) > 1:
+                raise ValueError(
+                    "multiple failures in one parallel class need map "
+                    "recompute (not just shuffle recovery)")
+        # batches are replicated k-1 ways: recovery is possible iff no
+        # batch lost ALL its holders (for k = 3 that means single failure)
+        pl = self.placement
+        for j in range(self.design.J):
+            for t in range(cfg.k):
+                if set(pl.holders(j, t)) <= self.failed:
+                    raise ValueError(
+                        f"batch (job {j}, batch {t}) lost all {cfg.k - 1} "
+                        "replicas — data loss, not recoverable by the "
+                        "shuffle (re-map from the master copy required)")
+
+    # -- function migration -------------------------------------------- #
+    def migrate_target(self, s: int) -> int:
+        """Live server taking over s's reduce duties (same class)."""
+        if s not in self.failed:
+            return s
+        cls = self.design.parallel_class(self.design.class_of(s))
+        for cand in cls:
+            if cand not in self.failed:
+                return cand
+        raise RuntimeError("whole parallel class failed")
+
+    # -- degraded shuffle ----------------------------------------------- #
+    def _coded_stage(self, stage, groups_chunks, fn_group):
+        """Run Algorithm 2 per group among LIVE members; deliver the rest
+        uncoded from live holders."""
+        from repro.core.shuffle import (coded_multicast_schedule,
+                                        decode_coded_multicast)
+        K = self.cfg.K
+        for G, chunk_specs in groups_chunks.items():
+            live = [s for s in G if s not in self.failed]
+            chunks, arrs = {}, {}
+            for c in chunk_specs:
+                qf = fn_group * K + c.qfunc
+                holders = [s for s in G
+                           if s != c.receiver and s not in self.failed]
+                # the failed server stores every batch the group uses
+                # except its own chunk's -> >= k-2 live holders remain,
+                # and >= 1 because k >= 2 and at most one failure per class
+                assert holders, "unrecoverable: no live holder"
+                val = self.servers[holders[0]].agg[(c.job, c.batch)][qf]
+                arrs[c.receiver] = (c, val)
+                chunks[c.receiver] = self._ser(val)
+            if len(live) == len(G):
+                super_spec = {r: chunks[r] for r in chunks}
+                txs = coded_multicast_schedule(G, super_spec, stage=stage,
+                                               tag=("group", G))
+                for t in txs:
+                    self.trace.add(t)
+                clen = len(next(iter(chunks.values())))
+                for c in chunk_specs:
+                    r = c.receiver
+                    known = {c2.receiver: self._ser(
+                        self.servers[r].agg[(c2.job, c2.batch)][
+                            fn_group * K + c2.qfunc])
+                        for c2 in chunk_specs if c2.receiver != r}
+                    dec = decode_coded_multicast(G, r, txs, known, clen)
+                    qf = fn_group * K + c.qfunc
+                    self.servers[r].recv_batch[(c.job, c.batch, qf)] = \
+                        self._de(dec)
+                continue
+            # degraded group: uncoded unicasts from live holders
+            for c in chunk_specs:
+                qf = fn_group * K + c.qfunc
+                rcv = self.migrate_target(c.receiver)
+                if rcv == c.receiver and c.receiver in self.failed:
+                    continue
+                holder = next(s for s in G if s != c.receiver
+                              and s not in self.failed)
+                val = self.servers[holder].agg[(c.job, c.batch)][qf]
+                payload = self._ser(val)
+                self.trace.add(Transmission(
+                    stage=stage, sender=holder, receivers=(rcv,),
+                    payload=payload, tag=("degraded", G)))
+                self.servers[rcv].recv_batch[(c.job, c.batch, qf)] = \
+                    self._de(payload)
+
+    def _stage3(self, fn_group):
+        from repro.core.shuffle import stage3_chunks
+        K = self.cfg.K
+        for spec in stage3_chunks(self.placement):
+            qf = fn_group * K + spec.receiver
+            rcv = self.migrate_target(spec.receiver)
+            if spec.sender not in self.failed:
+                sender_st = self.servers[spec.sender]
+                acc = None
+                for t in spec.batches:
+                    v = sender_st.agg[(spec.job, t)][qf]
+                    acc = v if acc is None else self.combine(acc, v)
+                payload = self._ser(acc)
+                self.trace.add(Transmission(
+                    stage=3, sender=spec.sender, receivers=(rcv,),
+                    payload=payload, tag=("job", spec.job)))
+                self.servers[rcv].recv_rest[(spec.job, qf)] = \
+                    self._de(payload)
+            else:
+                # recover each batch from a live redundant holder
+                acc = None
+                for t in spec.batches:
+                    holder = next(h for h in self.placement.holders(
+                        spec.job, t) if h not in self.failed)
+                    v = self.servers[holder].agg[(spec.job, t)][qf]
+                    payload = self._ser(v)
+                    self.trace.add(Transmission(
+                        stage=3, sender=holder, receivers=(rcv,),
+                        payload=payload, tag=("degraded-job", spec.job)))
+                    acc = v if acc is None else self.combine(acc, v)
+                self.servers[rcv].recv_rest[(spec.job, qf)] = acc
+        # migration fill: for every failed server f, the takeover also
+        # needs, per job f OWNED, the aggregate of the k-1 batches f held
+        # locally (complement of the degraded-stage-1 delivery).
+        pl, d = self.placement, self.design
+        for f in sorted(self.failed):
+            s = self.migrate_target(f)
+            qf = fn_group * K + f
+            for j in d.owned_jobs(f):
+                tf = pl.batch_of_label(j, f)
+                rest = [t for t in range(d.k) if t != tf]
+                # two live senders cover the complement: a live owner l'
+                # sends its stored complement batches (all but t_{l'}),
+                # another holder sends t_{l'}.
+                l1 = next(u for u in d.owners[j] if u not in self.failed)
+                t1 = pl.batch_of_label(j, l1)
+                acc = None
+                part = [t for t in rest if t != t1]
+                if part:
+                    a1 = None
+                    for t in part:
+                        v = self.servers[l1].agg[(j, t)][qf]
+                        a1 = v if a1 is None else self.combine(a1, v)
+                    self.trace.add(Transmission(
+                        stage=3, sender=l1, receivers=(s,),
+                        payload=self._ser(a1), tag=("migrate", j)))
+                    acc = a1
+                if t1 in rest:
+                    h2 = next(h for h in pl.holders(j, t1)
+                              if h not in self.failed)
+                    v2 = self.servers[h2].agg[(j, t1)][qf]
+                    self.trace.add(Transmission(
+                        stage=3, sender=h2, receivers=(s,),
+                        payload=self._ser(v2), tag=("migrate", j)))
+                    acc = v2 if acc is None else self.combine(acc, v2)
+                self.servers[s].recv_rest[(j, qf)] = acc
+
+    def reduce_phase(self):
+        """Reduce on live servers; migrated functions use the redirected
+        (stage-1/2 batch value) + (stage-3/fill complement) pair."""
+        pl, d = self.placement, self.design
+        results = [dict() for _ in range(d.K)]
+        for s_orig in range(d.K):
+            s = self.migrate_target(s_orig)
+            st = self.servers[s]
+            migrated = s != s_orig
+            for qf in self.functions_of(s_orig):
+                for j in range(d.J):
+                    if migrated:
+                        # unified: l = owner of j in the FAILED server's
+                        # class (l == s_orig when s_orig owned j)
+                        cls = d.class_of(s_orig)
+                        (l,) = [u for u in d.owners[j]
+                                if d.class_of(u) == cls]
+                        tl = pl.batch_of_label(j, l)
+                        acc = self.combine(st.recv_batch[(j, tl, qf)],
+                                           st.recv_rest[(j, qf)])
+                    elif d.is_owner(s, j):
+                        tmiss = pl.batch_of_label(j, s)
+                        acc = st.recv_batch[(j, tmiss, qf)]
+                        for t in range(d.k):
+                            if t != tmiss:
+                                acc = self.combine(acc, st.agg[(j, t)][qf])
+                    else:
+                        cls = d.class_of(s)
+                        (l,) = [u for u in d.owners[j]
+                                if d.class_of(u) == cls]
+                        tl = pl.batch_of_label(j, l)
+                        acc = self.combine(st.recv_batch[(j, tl, qf)],
+                                           st.recv_rest[(j, qf)])
+                    results[s][(j, qf)] = acc
+            if migrated:
+                results[s_orig] = {}
+        return results
+
+
+@dataclass(frozen=True)
+class ReplanReport:
+    old_qk: tuple
+    new_qk: tuple
+    moved_fraction: float     # fraction of stored subfiles that must move
+    new_storage_fraction: float
+
+
+def elastic_replan(q_old: int, k_old: int, K_new: int,
+                   mu_target: float | None = None,
+                   gamma: int = 1) -> ReplanReport:
+    """Re-derive the design for a resized cluster and quantify movement.
+
+    Servers keep their index order; subfiles already resident count as
+    not-moved. The CAMR structural requirement is only K = q*k, so
+    elastic scaling is a pure re-placement (no re-encoding of data)."""
+    q_new, k_new = factorize_cluster(K_new, mu_target)
+    old = make_placement(make_design(q_old, k_old), gamma)
+    new = make_placement(make_design(q_new, k_new), gamma)
+    K_old = q_old * k_old
+    # compare on the job universe of the smaller plan, normalized per job
+    J = min(old.design.J, new.design.J)
+    total, moved = 0, 0
+    for s in range(min(K_old, K_new)):
+        old_set = {(j, n) for j, n in old.stored_subfiles(s) if j < J}
+        new_set = {(j, n) for j, n in new.stored_subfiles(s) if j < J}
+        total += len(new_set)
+        moved += len(new_set - old_set)
+    for s in range(min(K_old, K_new), K_new):   # fresh servers fetch all
+        new_set = {(j, n) for j, n in new.stored_subfiles(s) if j < J}
+        total += len(new_set)
+        moved += len(new_set)
+    return ReplanReport(
+        old_qk=(q_old, k_old), new_qk=(q_new, k_new),
+        moved_fraction=moved / max(total, 1),
+        new_storage_fraction=(k_new - 1) / K_new)

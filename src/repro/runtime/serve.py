@@ -1,0 +1,69 @@
+"""Batched serving loop: prefill + greedy/temperature decode.
+
+Production shape: requests arrive as (prompt, max_new) pairs; the loop
+prefills the batch once, then iterates decode_step with per-sequence
+stop handling. (The dry-run serve_step in launch/dryrun.py lowers a
+single decode step against the full-length cache; this module is the
+host-side loop that drives it.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import lm
+
+__all__ = ["GenerationResult", "generate"]
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, T_out]
+    steps: int
+    prefill_len: int
+
+
+def generate(cfg: ModelConfig, params, prompts: np.ndarray, *,
+             max_new: int = 32, eos: int | None = None,
+             temperature: float = 0.0, seed: int = 0,
+             extras: dict | None = None) -> GenerationResult:
+    """prompts: [B, T_prompt] int32 (right-aligned, no padding support
+    needed for the examples). Greedy when temperature == 0."""
+    B, T = prompts.shape
+    max_len = T + max_new
+    batch = {"tokens": jnp.asarray(prompts)}
+    if extras:
+        batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+
+    prefill = jax.jit(lambda p, b: lm.prefill(cfg, p, b, max_len=max_len))
+    step_fn = jax.jit(
+        lambda p, c, t, i: lm.decode_step(cfg, p, c, t, i))
+
+    logits, cache = prefill(params, batch)
+    key = jax.random.PRNGKey(seed)
+    out = [np.asarray(prompts)]
+    done = np.zeros(B, bool)
+    cur = None
+    for i in range(max_new):
+        lg = logits[:, -1, :cfg.vocab]       # drop vocab padding
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        cur = np.asarray(nxt, np.int32)[:, None]
+        out.append(cur)
+        if eos is not None:
+            done |= (cur[:, 0] == eos)
+            if done.all():
+                break
+        logits, cache = step_fn(params, cache, jnp.asarray(cur),
+                                jnp.int32(T + i))
+    return GenerationResult(tokens=np.concatenate(out, axis=1),
+                            steps=len(out) - 1, prefill_len=T)

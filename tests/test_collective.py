@@ -1,0 +1,93 @@
+"""shard_map CAMR shuffle vs oracle — run in subprocesses with K host
+devices (the main test process must keep seeing 1 device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.collective import CAMRPlan, camr_collective_bytes, make_plan
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_RUN = textwrap.dedent("""
+    import numpy as np, jax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collective import (make_plan, camr_shuffle,
+        scatter_contributions, camr_shuffle_reference, uncoded_reduce_scatter)
+    q, k, d = {q}, {k}, {d}
+    plan = make_plan(q, k, d); K = plan.K
+    rng = np.random.default_rng(0)
+    bg = rng.standard_normal((plan.J, k, K, d)).astype(np.float32)
+    contribs = scatter_contributions(plan, bg)
+    mesh = jax.make_mesh((K,), ('camr',),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    f = jax.jit(jax.shard_map(
+        lambda c: camr_shuffle(plan, c[0], axis_name='camr')[None],
+        mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+    out = np.asarray(f(contribs))
+    ref = camr_shuffle_reference(plan, bg)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-6)
+    g = jax.jit(jax.shard_map(
+        lambda c: uncoded_reduce_scatter(c[0], axis_name='camr',
+                                         plan=plan)[None],
+        mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+    np.testing.assert_allclose(np.asarray(g(contribs)), ref,
+                               rtol=2e-5, atol=2e-6)
+    print('OK')
+""")
+
+
+def _run_subprocess(code: str, ndev: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.parametrize("q,k,d", [(2, 3, 8), (4, 3, 16), (3, 4, 9),
+                                   (2, 4, 6)])
+def test_camr_shuffle_multidevice(q, k, d):
+    out = _run_subprocess(_RUN.format(q=q, k=k, d=d), ndev=q * k)
+    assert "OK" in out
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        make_plan(2, 2, 8)  # k >= 3 for the TPU path
+    with pytest.raises(ValueError):
+        make_plan(2, 3, 7)  # d not divisible by k-1
+
+
+def test_plan_tables_consistent():
+    plan = make_plan(3, 3, 8)
+    K, J_own = plan.K, plan.J_own
+    assert plan.owned_jobs.shape == (K, J_own)
+    # each job appears in exactly k owner lists
+    flat = plan.owned_jobs.ravel().tolist()
+    for j in range(plan.J):
+        assert flat.count(j) == plan.k
+    # stage-3 permutations: q-1 full intra-class cyclic shifts
+    assert len(plan.s3_perms) == plan.q - 1
+    for perm in plan.s3_perms:
+        assert len(perm) == K
+        assert sorted(p[0] for p in perm) == list(range(K))
+        assert sorted(p[1] for p in perm) == list(range(K))
+
+
+def test_collective_bytes_model():
+    """p2p byte counts: stages 1-2 carry k packets of d/(k-1) per group per
+    round; totals beat a dense ring-psum of [J, K, d]."""
+    plan = make_plan(2, 3, 8)
+    b = camr_collective_bytes(plan, itemsize=4)
+    K, J, d, k = plan.K, plan.J, plan.d, plan.k
+    assert b["stage1"] == J * (k - 1) * (d // (k - 1)) * 4 * k
+    assert b["stage3"] == (plan.q - 1) * plan.J_own * d * 4 * K
+    assert b["camr_total"] < b["psum_ring_total"]

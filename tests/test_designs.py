@@ -1,0 +1,105 @@
+"""Resolvable-design construction — paper §III, Lemma 1, Example 2."""
+
+import numpy as np
+import pytest
+
+from repro.core.designs import (
+    ResolvableDesign, factorize_cluster, make_design, spc_codeword_table)
+
+SWEEP = [(2, 2), (2, 3), (3, 2), (2, 4), (3, 3), (4, 2), (4, 3), (2, 5),
+         (5, 2), (6, 2), (3, 4), (4, 4), (5, 3)]  # q need not be prime
+
+
+@pytest.mark.parametrize("q,k", SWEEP)
+def test_lemma1_properties(q, k):
+    d = make_design(q, k)
+    d.validate()
+    assert d.K == k * q
+    assert d.J == q ** (k - 1)
+    # |A| = kq blocks, |B| = q^{k-2}
+    assert len(d.blocks) == k * q
+    assert all(len(b) == d.block_size for b in d.blocks)
+
+
+@pytest.mark.parametrize("q,k", SWEEP)
+def test_codeword_table(q, k):
+    T = spc_codeword_table(q, k)
+    assert T.shape == (k, q ** (k - 1))
+    # parity row: sum of message rows mod q
+    np.testing.assert_array_equal(T[-1], T[:-1].sum(axis=0) % q)
+    # all codewords distinct
+    assert len({tuple(c) for c in T.T}) == q ** (k - 1)
+
+
+def test_example2_owner_sets():
+    """Paper Eq. (2): exact owner sets for q=2, k=3 (0-indexed here)."""
+    d = make_design(2, 3)
+    assert d.owners[0] == (0, 2, 4)  # X^(1) = {U1, U3, U5}
+    assert d.owners[1] == (0, 3, 5)  # X^(2) = {U1, U4, U6}
+    assert d.owners[2] == (1, 2, 5)  # X^(3) = {U2, U3, U6}
+    assert d.owners[3] == (1, 3, 4)  # X^(4) = {U2, U4, U5}
+    # parallel classes partition the servers q at a time
+    assert d.parallel_classes == ((0, 1), (2, 3), (4, 5))
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3), (3, 4)])
+def test_stage2_groups(q, k):
+    d = make_design(q, k)
+    groups = d.stage2_groups()
+    # paper: q^{k-1}(q-1) such groups
+    assert len(groups) == q ** (k - 1) * (q - 1)
+    for G in groups:
+        # one block per parallel class, empty total intersection
+        assert sorted(d.class_of(s) for s in G) == list(range(k))
+        common = set(d.blocks[G[0]])
+        for s in G[1:]:
+            common &= set(d.blocks[s])
+        assert not common
+        # every (k-1)-subset co-owns exactly one job, not owned by the rest
+        for kp in G:
+            P = tuple(s for s in G if s != kp)
+            j = d.common_job(P)
+            assert all(d.is_owner(s, j) for s in P)
+            assert not d.is_owner(kp, j)
+            # the remaining owner is in kp's parallel class
+            (l,) = [u for u in d.owners[j]
+                    if d.class_of(u) == d.class_of(kp)]
+            assert l != kp
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (4, 3), (2, 4)])
+def test_common_job_matches_bruteforce(q, k):
+    d = make_design(q, k)
+    import itertools
+    for G in d.stage2_groups():
+        for kp in G:
+            P = tuple(s for s in G if s != kp)
+            want = set(d.blocks[P[0]])
+            for s in P[1:]:
+                want &= set(d.blocks[s])
+            assert want == {d.common_job(P)}
+
+
+def test_owner_block_duality():
+    d = make_design(3, 3)
+    for j in range(d.J):
+        for s in d.owners[j]:
+            assert j in d.blocks[s]
+    for s in range(d.K):
+        for j in d.blocks[s]:
+            assert s in d.owners[j]
+
+
+def test_factorize_cluster():
+    assert factorize_cluster(6) in [(2, 3), (3, 2)]
+    q, k = factorize_cluster(100, mu_target=0.04)  # K=100, muK=4 -> k=5
+    assert k * q == 100 and k == 5
+    with pytest.raises(ValueError):
+        factorize_cluster(7)  # prime: no q,k >= 2
+
+
+def test_invalid_params():
+    with pytest.raises(ValueError):
+        make_design(1, 3)
+    with pytest.raises(ValueError):
+        make_design(3, 1)

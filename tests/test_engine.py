@@ -1,0 +1,138 @@
+"""End-to-end CAMR engine — Examples 1-5, load formulas, correctness."""
+
+import numpy as np
+import pytest
+
+from repro.core import loads
+from repro.core.engine import CAMRConfig, CAMREngine, run_wordcount_example
+
+
+def _linear_map(Q):
+    def map_fn(job, sf):
+        return np.outer(np.arange(1, Q + 1, dtype=np.float64) + job, sf)
+    return map_fn
+
+
+def _make_datasets(cfg, dim=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [[rng.standard_normal(dim) for _ in range(cfg.N)]
+            for _ in range(cfg.J)]
+
+
+def test_example1_wordcount_loads():
+    """Paper Examples 1-5: K=6, q=2, k=3, N=6 -> L = 1/4 + 1/4 + 1/2 = 1."""
+    eng, results, L = run_wordcount_example(q=2, k=3, gamma=2)
+    assert L["L_stage1_bus"] == pytest.approx(0.25)
+    assert L["L_stage2_bus"] == pytest.approx(0.25)
+    assert L["L_stage3_bus"] == pytest.approx(0.5)
+    assert L["L_total_bus"] == pytest.approx(1.0)
+
+
+def test_example1_transmission_counts():
+    """Stage 2 of Example 4: 4 groups x 3 transmissions of B/2; stage 3 of
+    Example 5: 6 servers x 2 missing jobs, uncoded B each."""
+    eng, _, _ = run_wordcount_example(q=2, k=3, gamma=2)
+    s2 = [t for t in eng.trace.transmissions if t.stage == 2]
+    assert len(s2) == 4 * 3
+    s3 = [t for t in eng.trace.transmissions if t.stage == 3]
+    assert len(s3) == 6 * 2
+    assert all(len(t.receivers) == 1 for t in s3)
+
+
+@pytest.mark.parametrize("q,k,gamma", [
+    (2, 3, 1), (2, 3, 2), (3, 3, 1), (2, 4, 3), (4, 3, 1), (3, 4, 1),
+    (4, 2, 1), (2, 2, 2), (6, 2, 1), (2, 5, 1),
+])
+def test_correct_and_loads_match_formula(q, k, gamma):
+    """Decode correctness + measured bytes == §IV formulas, all (q,k,gamma).
+
+    Value dim is a multiple of k-1 so packets need no padding (the paper's
+    divisibility assumption)."""
+    cfg = CAMRConfig(q=q, k=k, gamma=gamma)
+    dim = 2 * max(1, k - 1)
+    ds = _make_datasets(cfg, dim=dim)
+    eng = CAMREngine(cfg, _linear_map(cfg.num_functions()))
+    results = eng.run(ds)
+    eng.verify(ds, results)
+    L = eng.measured_loads()
+    l1, l2, l3 = loads.camr_stage_loads(q, k)
+    assert L["L_stage1_bus"] == pytest.approx(l1)
+    assert L["L_stage2_bus"] == pytest.approx(l2)
+    assert L["L_stage3_bus"] == pytest.approx(l3)
+    assert L["L_total_bus"] == pytest.approx(loads.camr_load(q, k))
+    # p2p model: stages 1-2 cost (k-1)x their bus load
+    assert L["L_total_p2p"] == pytest.approx(loads.camr_load_p2p(q, k))
+
+
+def test_gamma_invariance():
+    """gamma scales subfile granularity but never the load (DESIGN.md §8)."""
+    got = []
+    for gamma in (1, 2, 5):
+        cfg = CAMRConfig(q=3, k=3, gamma=gamma)
+        ds = _make_datasets(cfg, dim=4)
+        eng = CAMREngine(cfg, _linear_map(cfg.num_functions()))
+        eng.verify(ds, eng.run(ds))
+        got.append(eng.measured_loads()["L_total_bus"])
+    assert len(set(got)) == 1
+
+
+def test_q_multiple_of_K():
+    """Q = 2K: shuffle repeats per function group (paper §II)."""
+    cfg = CAMRConfig(q=2, k=3, gamma=1, Q=12)
+    ds = _make_datasets(cfg, dim=4)
+    eng = CAMREngine(cfg, _linear_map(12))
+    results = eng.run(ds)
+    eng.verify(ds, results)
+    # load is normalized by J*Q*B, so it still matches the formula
+    assert eng.measured_loads()["L_total_bus"] == pytest.approx(
+        loads.camr_load(2, 3))
+    # every server reduced exactly Q/K = 2 functions per job
+    for s, res in enumerate(results):
+        assert len(res) == 2 * cfg.J
+        assert {qf % cfg.K for (_, qf) in res} == {s}
+
+
+def test_label_perm_invariance_of_load_and_result():
+    cfg = CAMRConfig(q=2, k=3, gamma=2)
+    ds = _make_datasets(cfg, dim=4)
+    perms = [(2, 0, 1)] * cfg.J
+    eng = CAMREngine(cfg, _linear_map(cfg.num_functions()), label_perm=perms)
+    eng.verify(ds, eng.run(ds))
+    assert eng.measured_loads()["L_total_bus"] == pytest.approx(1.0)
+
+
+def test_nonlinear_aggregation_max():
+    """Aggregation only needs associativity+commutativity (Def. 1): max."""
+    cfg = CAMRConfig(q=2, k=3, gamma=1)
+    ds = _make_datasets(cfg, dim=4, seed=3)
+    eng = CAMREngine(cfg, _linear_map(cfg.num_functions()),
+                     combine=np.maximum)
+    eng.verify(ds, eng.run(ds))
+
+
+def test_map_work_matches_storage():
+    """Each server maps exactly mu*J*N subfiles (computation load)."""
+    cfg = CAMRConfig(q=2, k=3, gamma=2)
+    ds = _make_datasets(cfg, dim=4)
+    eng = CAMREngine(cfg, _linear_map(cfg.num_functions()))
+    eng.run(ds)
+    mu = (cfg.k - 1) / cfg.K
+    for st in eng.servers:
+        assert st.map_invocations == mu * cfg.J * cfg.N
+
+
+def test_int_payloads_bitexact():
+    cfg = CAMRConfig(q=2, k=3, gamma=1)
+    rng = np.random.default_rng(0)
+    ds = [[rng.integers(0, 1000, size=4) for _ in range(cfg.N)]
+          for _ in range(cfg.J)]
+
+    def map_fn(job, sf):
+        return np.tile(sf, (cfg.num_functions(), 1)).astype(np.int64)
+
+    eng = CAMREngine(cfg, map_fn)
+    results = eng.run(ds)
+    oracle = eng.oracle(ds)
+    for s, res in enumerate(results):
+        for key, v in res.items():
+            np.testing.assert_array_equal(v, oracle[key])

@@ -1,0 +1,82 @@
+"""Analytic loads & job requirements — paper §IV, §V, Tables I-III."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import loads
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3), (5, 4),
+                                 (2, 18), (9, 4)])
+def test_stage_loads_sum_to_total(q, k):
+    assert sum(loads.camr_stage_loads(q, k)) == pytest.approx(
+        loads.camr_load(q, k))
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3), (5, 4),
+                                 (2, 18), (9, 4), (50, 2), (2, 50)])
+def test_camr_equals_ccdc_at_same_mu(q, k):
+    """§V: L_CAMR == L_CCDC for mu = (k-1)/K."""
+    K = k * q
+    mu = loads.storage_fraction(q, k)
+    assert loads.camr_load(q, k) == pytest.approx(loads.ccdc_load(mu, K))
+
+
+def test_table3_job_requirements():
+    """Table III: K = 100 servers."""
+    rows = [
+        # (q, k, J_CAMR, J_CCDC)  with mu*K = k-1
+        (50, 2, 50, 4950),
+        (25, 4, 15625, 3921225),
+        (20, 5, 160000, 75287520),
+    ]
+    for q, k, j_camr, j_ccdc in rows:
+        assert k * q == 100
+        assert loads.camr_min_jobs(q, k) == j_camr
+        mu = (k - 1) / 100
+        assert loads.ccdc_min_jobs(mu, 100) == j_ccdc
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (4, 3), (2, 4), (25, 4),
+                                 (20, 5), (4, 8)])
+def test_job_requirement_bound(q, k):
+    """§V: J_CCDC = C(kq, k) >= q^k > q^{k-1} = J_CAMR."""
+    K = k * q
+    mu = (k - 1) / K
+    assert loads.ccdc_min_jobs(mu, K) >= q ** k > loads.camr_min_jobs(q, k)
+
+
+def test_example1_ccdc_comparison():
+    """§III-C: for K=6, mu=1/3 CCDC needs J = C(6,3) = 20 jobs, CAMR 4."""
+    assert loads.ccdc_min_jobs(1 / 3, 6) == 20
+    assert loads.camr_min_jobs(2, 3) == 4
+    assert loads.ccdc_load(1 / 3, 6) == pytest.approx(1.0)
+    assert loads.camr_load(2, 3) == pytest.approx(1.0)
+
+
+def test_load_decreases_with_storage():
+    """More redundancy (larger k at fixed K) -> lower load."""
+    # K = 64: factorizations (q, k)
+    combos = [(32, 2), (16, 4), (8, 8), (4, 16), (2, 32)]
+    ls = [loads.camr_load(q, k) for q, k in combos]
+    assert all(a > b for a, b in zip(ls, ls[1:]))
+
+
+def test_uncoded_baselines_dominate_camr():
+    for q, k in [(2, 3), (3, 3), (4, 4), (8, 4)]:
+        assert loads.camr_load(q, k) < loads.uncoded_aggregated_load(q, k)
+
+
+def test_cdc_load_context():
+    # CDC without aggregation at r=2, K=6: (1/2)(1-1/3) = 1/3 per its own
+    # normalization (per-subfile values, N times more of them)
+    assert loads.cdc_load(2, 6) == pytest.approx(1 / 3)
+    with pytest.raises(ValueError):
+        loads.cdc_load(0, 6)
+
+
+def test_ccdc_invalid_mu():
+    with pytest.raises(ValueError):
+        loads.ccdc_load(0.17, 6)  # mu*K not integer

@@ -1,0 +1,75 @@
+"""shard_map MoE (EP a2a / EP-replicated / TP) vs the no-mesh reference —
+run in subprocesses with 8 host devices."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_RUN = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models import lm
+    from repro.launch import partitioning as pt
+    mesh = jax.make_mesh((4, 2), ('data', 'model'),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    cfg = reduced(get_config('{arch}'))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {{'tokens': jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)),
+                                    jnp.int32),
+              'labels': jnp.asarray(rng.integers(0, cfg.vocab, (8, 32)),
+                                    jnp.int32)}}
+    ref, g0 = jax.jit(lambda p: jax.value_and_grad(
+        lambda pp: lm.train_loss(cfg, pp, batch)[0])(p))(params)
+    def gstep(p):
+        with pt.axis_rules(mesh):
+            return jax.value_and_grad(
+                lambda pp: lm.train_loss(cfg, pp, batch)[0])(p)
+    with mesh:
+        got, g = jax.jit(gstep)(params)
+    assert abs(float(ref) - float(got)) < 2e-4, (float(ref), float(got))
+    d = max(float(jnp.abs(a.astype(jnp.float32)
+                          - b.astype(jnp.float32)).max())
+            for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g0)))
+    assert d < 2e-2, d
+    # decode path (EP-replicated for 'ep' mode)
+    T = 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (8, T + 1)), jnp.int32)
+    lg_full, _ = jax.jit(lambda p: lm.prefill(cfg, p,
+                                              {{'tokens': toks}}))(params)
+    def dstep(p):
+        with pt.axis_rules(mesh):
+            _, cache = lm.prefill(cfg, p, {{'tokens': toks[:, :T]}},
+                                  max_len=T + 1)
+            lg, _ = lm.decode_step(cfg, p, cache, toks[:, T:T + 1],
+                                   jnp.int32(T))
+            return lg
+    with mesh:
+        lg_dec = jax.jit(dstep)(params)
+    np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_dec),
+                               rtol=2e-3, atol=2e-3)
+    print('OK')
+""")
+
+
+def _run_subprocess(code: str, ndev: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["moonshot_v1_16b_a3b", "mixtral_8x7b"])
+def test_moe_mesh_parity(arch):
+    out = _run_subprocess(_RUN.format(arch=arch))
+    assert "OK" in out

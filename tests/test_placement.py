@@ -1,0 +1,73 @@
+"""Algorithm 1 placement — paper §III-A, Example 2."""
+
+import numpy as np
+import pytest
+
+from repro.core.designs import make_design
+from repro.core.placement import make_placement
+
+SWEEP = [(2, 3, 1), (2, 3, 2), (3, 3, 1), (2, 4, 3), (4, 3, 2), (3, 2, 1),
+         (2, 2, 4)]
+
+
+@pytest.mark.parametrize("q,k,gamma", SWEEP)
+def test_placement_valid(q, k, gamma):
+    pl = make_placement(make_design(q, k), gamma)
+    pl.validate()
+    assert pl.N == k * gamma
+
+
+@pytest.mark.parametrize("q,k,gamma", SWEEP)
+def test_storage_fraction(q, k, gamma):
+    """mu = (k-1)/K for every server (paper §III-A)."""
+    d = make_design(q, k)
+    pl = make_placement(d, gamma)
+    for s in range(d.K):
+        assert pl.storage_fraction(s) == pytest.approx((k - 1) / d.K)
+
+
+@pytest.mark.parametrize("q,k,gamma", SWEEP)
+def test_each_batch_on_k_minus_1_servers(q, k, gamma):
+    d = make_design(q, k)
+    pl = make_placement(d, gamma)
+    M = pl.placement_matrix()  # [K, J, N]
+    # every subfile is stored on exactly k-1 servers
+    assert (M.sum(axis=0) == k - 1).all()
+    # owners store (k-1)*gamma subfiles per owned job; non-owners none
+    for s in range(d.K):
+        for j in range(d.J):
+            n = M[s, j].sum()
+            assert n == ((k - 1) * gamma if d.is_owner(s, j) else 0)
+
+
+def test_example2_batches():
+    """Paper Example 2: job 1's subfiles live exclusively on U1, U3, U5."""
+    d = make_design(2, 3)
+    pl = make_placement(d, gamma=2)
+    M = pl.placement_matrix()
+    holders = {s for s in range(6) if M[s, 0].any()}
+    assert holders == {0, 2, 4}
+    # each batch of job 0 is on exactly two of the three owners
+    for t in range(3):
+        hs = pl.holders(0, t)
+        assert len(hs) == 2 and set(hs) <= {0, 2, 4}
+
+
+def test_label_perm_invariance():
+    """Any batch<->owner bijection yields the same storage fraction and
+    per-batch replication (DESIGN.md §8)."""
+    d = make_design(2, 3)
+    perms = [(1, 2, 0)] * d.J
+    pl = make_placement(d, gamma=2, label_perm=perms)
+    pl.validate()
+    M = pl.placement_matrix()
+    assert (M.sum(axis=0) == 2).all()
+
+
+def test_batch_of_label_roundtrip():
+    d = make_design(3, 3)
+    pl = make_placement(d, gamma=1)
+    for j in range(d.J):
+        for t in range(d.k):
+            lab = pl.batch_owner_label(j, t)
+            assert pl.batch_of_label(j, lab) == t

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import loads
+from repro.core.designs import make_design
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.placement import make_placement
+from repro.core.shuffle import (
+    coded_multicast_schedule, decode_coded_multicast, split_packets,
+    xor_bytes)
+
+qk = st.tuples(st.integers(2, 5), st.integers(2, 5))  # (q, k)
+
+
+@given(qk)
+@settings(max_examples=25, deadline=None)
+def test_design_invariants(qk_):
+    q, k = qk_
+    d = make_design(q, k)
+    d.validate()
+    # parallel classes partition servers; blocks partition jobs per class
+    assert sorted(s for c in d.parallel_classes for s in c) == \
+        list(range(d.K))
+
+
+@given(qk, st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_placement_replication_invariant(qk_, gamma):
+    q, k = qk_
+    pl = make_placement(make_design(q, k), gamma)
+    M = pl.placement_matrix()
+    # every subfile on exactly k-1 servers; per-server storage = mu
+    assert (M.sum(axis=0) == k - 1).all()
+    mu = (k - 1) / (k * q)
+    assert np.allclose(M.sum(axis=(1, 2)) / (pl.design.J * pl.N), mu)
+
+
+@given(st.binary(min_size=1, max_size=200), st.integers(1, 7))
+@settings(max_examples=50, deadline=None)
+def test_split_packets_reassembles(data, m):
+    assert b"".join(split_packets(data, m))[:len(data)] == data
+
+
+@given(st.lists(st.binary(min_size=16, max_size=16), min_size=2, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_xor_group_properties(parts):
+    # commutative + self-inverse
+    import random
+    acc = xor_bytes(*parts)
+    shuffled = list(parts)
+    random.Random(0).shuffle(shuffled)
+    assert xor_bytes(*shuffled) == acc
+    assert xor_bytes(acc, *parts[1:]) == parts[0]
+
+
+@given(st.integers(2, 6), st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_lemma2_random_chunks(k, seed):
+    rng = np.random.default_rng(seed)
+    group = tuple(sorted(rng.choice(100, size=k, replace=False).tolist()))
+    B = 8 * (k - 1)
+    chunks = {s: rng.bytes(B) for s in group}
+    txs = coded_multicast_schedule(group, chunks, stage=1)
+    assert sum(t.nbytes for t in txs) == B * k // (k - 1)
+    for r in group:
+        known = {s: c for s, c in chunks.items() if s != r}
+        assert decode_coded_multicast(group, r, txs, known, B) == chunks[r]
+
+
+@given(st.tuples(st.integers(2, 4), st.integers(2, 4)), st.integers(0, 999))
+@settings(max_examples=10, deadline=None)
+def test_engine_load_matches_formula_property(qk_, seed):
+    """For any (q, k) and random data: decode correct, measured bus load
+    equals the closed form (§IV) when packet sizes divide evenly."""
+    q, k = qk_
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    dim = 4 * max(1, k - 1)
+    rng = np.random.default_rng(seed)
+    ds = [[rng.standard_normal(dim) for _ in range(cfg.N)]
+          for _ in range(cfg.J)]
+
+    def map_fn(job, sf):
+        return np.outer(np.arange(1, cfg.num_functions() + 1), sf)
+
+    eng = CAMREngine(cfg, map_fn)
+    eng.verify(ds, eng.run(ds))
+    assert abs(eng.measured_loads()["L_total_bus"]
+               - loads.camr_load(q, k)) < 1e-9
+
+
+@given(st.integers(2, 5), st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_aggregation_reduces_values_sent(q, k):
+    """CAMR (with aggregation) always beats CDC-style per-subfile shuffles
+    whenever N > k: the aggregate count is independent of gamma."""
+    l_camr = loads.camr_load(q, k)
+    # CDC at the same computation redundancy r = k-1 ships (1-mu)/(k-1)
+    # *per subfile value*; with N = k*gamma subfiles and gamma >= 2 its
+    # total value traffic exceeds CAMR's (which is gamma-invariant).
+    mu = (k - 1) / (k * q)
+    gamma = 2
+    N = k * gamma
+    cdc_total_values = loads.cdc_load(k - 1, k * q) * N
+    assert l_camr < cdc_total_values or (q == 2 and k == 2)

@@ -1,0 +1,120 @@
+"""Coded multicast (Lemma 2 / Algorithm 2) and stage schedules — §III-C."""
+
+import numpy as np
+import pytest
+
+from repro.core.designs import make_design
+from repro.core.placement import make_placement
+from repro.core.shuffle import (
+    coded_multicast_schedule, decode_coded_multicast, split_packets,
+    stage1_chunks, stage2_chunks, stage3_chunks, xor_bytes)
+
+
+def test_xor_bytes_involution():
+    rng = np.random.default_rng(0)
+    a, b = rng.bytes(64), rng.bytes(64)
+    assert xor_bytes(xor_bytes(a, b), b) == a
+    assert xor_bytes(a, a) == b"\x00" * 64
+
+
+def test_split_packets_roundtrip():
+    data = bytes(range(100))
+    for m in (1, 2, 3, 4, 7):
+        pk = split_packets(data, m)
+        assert len(pk) == m
+        assert len({len(p) for p in pk}) == 1
+        assert b"".join(pk)[:100] == data
+
+
+@pytest.mark.parametrize("k", [2, 3, 4, 5, 6])
+def test_lemma2_coded_multicast(k):
+    """k transmissions of B/(k-1) bits deliver all k chunks (Lemma 2)."""
+    rng = np.random.default_rng(k)
+    group = tuple(range(10, 10 + k))
+    B = 12 * (k - 1)  # divisible -> exact load
+    chunks = {s: rng.bytes(B) for s in group}
+    txs = coded_multicast_schedule(group, chunks, stage=1)
+    assert len(txs) == k
+    total = sum(t.nbytes for t in txs)
+    assert total == B * k // (k - 1)  # Lemma 2: Bk/(k-1) bits
+    for r in group:
+        known = {s: chunks[s] for s in group if s != r}
+        got = decode_coded_multicast(group, r, txs, known, B)
+        assert got == chunks[r]
+
+
+def test_lemma2_padding_overhead_accounted():
+    """When (k-1) does not divide B, on-wire bytes include padding."""
+    group = (0, 1, 2)
+    chunks = {s: bytes([s] * 7) for s in group}  # 7 bytes, k-1=2 -> pad to 8
+    txs = coded_multicast_schedule(group, chunks, stage=1)
+    assert sum(t.nbytes for t in txs) == 3 * 4  # ceil(7/2)=4 per packet
+    for r in group:
+        known = {s: chunks[s] for s in group if s != r}
+        assert decode_coded_multicast(group, r, txs, known, 7) == chunks[r]
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3)])
+def test_stage1_chunk_structure(q, k):
+    d = make_design(q, k)
+    pl = make_placement(d, gamma=1)
+    groups = stage1_chunks(pl)
+    assert len(groups) == d.J  # one group per job
+    for G, specs in groups.items():
+        assert len(specs) == k
+        for c in specs:
+            # receiver misses exactly that batch; all other owners hold it
+            assert not pl.stores(c.receiver, c.job, c.batch)
+            for s in G:
+                if s != c.receiver:
+                    assert pl.stores(s, c.job, c.batch)
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3)])
+def test_stage2_chunk_structure(q, k):
+    d = make_design(q, k)
+    pl = make_placement(d, gamma=1)
+    groups = stage2_chunks(pl)
+    assert len(groups) == d.J * (q - 1)
+    for G, specs in groups.items():
+        for c in specs:
+            assert not d.is_owner(c.receiver, c.job)
+            assert d.class_of(c.classmate_owner) == d.class_of(c.receiver)
+            # the batch is the one the class-mate owner misses
+            assert not pl.stores(c.classmate_owner, c.job, c.batch)
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (3, 3), (2, 4), (4, 3)])
+def test_stage3_coverage(q, k):
+    """Every (server, missing job) pair receives exactly one unicast with
+    the complement batches (proof of stage-3 correctness, Appendix)."""
+    d = make_design(q, k)
+    pl = make_placement(d, gamma=1)
+    specs = stage3_chunks(pl)
+    seen = {}
+    for c in specs:
+        key = (c.receiver, c.job)
+        assert key not in seen
+        seen[key] = c
+        assert d.class_of(c.sender) == d.class_of(c.receiver)
+        assert d.is_owner(c.sender, c.job)
+        assert not d.is_owner(c.receiver, c.job)
+        # sender stores exactly those batches
+        for t in c.batches:
+            assert pl.stores(c.sender, c.job, t)
+        assert len(c.batches) == k - 1
+    for s in range(d.K):
+        missing = [j for j in range(d.J) if not d.is_owner(s, j)]
+        assert len(missing) == d.J - d.block_size
+        for j in missing:
+            assert (s, j) in seen
+
+
+def test_example3_stage1_transmission_count():
+    """Example 3: 6 servers, J=4 — stage 1 sends J*k = 12 coded packets of
+    B/2 each => 6B total, L1 = 6B/(J*Q*B) = 1/4."""
+    d = make_design(2, 3)
+    pl = make_placement(d, gamma=2)
+    groups = stage1_chunks(pl)
+    n_tx = sum(len(G) for G in groups)  # k per group
+    assert n_tx == d.J * 3
