@@ -50,6 +50,8 @@ SUITES = {
                               fromlist=["rows"]).rows(),
     "collective": lambda: __import__("benchmarks.bench_collective",
                                      fromlist=["rows"]).rows(),
+    "schedule": lambda: __import__("benchmarks.bench_schedule",
+                                   fromlist=["rows"]).rows(),
     "roofline": _roofline_rows,
 }
 

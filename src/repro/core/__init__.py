@@ -2,6 +2,7 @@
 
 from .designs import ResolvableDesign, make_design, factorize_cluster
 from .placement import Placement, make_placement
+from .schedule import ShuffleProgram, lower_program, lower_degraded
 from .engine import CAMRConfig, CAMREngine, run_wordcount_example
 from . import loads, shuffle, baselines
 
@@ -11,6 +12,9 @@ __all__ = [
     "factorize_cluster",
     "Placement",
     "make_placement",
+    "ShuffleProgram",
+    "lower_program",
+    "lower_degraded",
     "CAMRConfig",
     "CAMREngine",
     "run_wordcount_example",

@@ -1,9 +1,10 @@
-"""TPU-native CAMR coded shuffle on a JAX mesh axis (shard_map + ppermute).
+"""TPU-native CAMR coded shuffle on a JAX mesh axis (shard_map executor
+of the compiled :class:`~repro.core.schedule.ShuffleProgram`).
 
 This is the production counterpart of :mod:`repro.core.engine`: the same
-3-stage schedule, expressed as SPMD collectives on a device axis of size
-``K = k*q``. See DESIGN.md §3 for the multicast -> collective_permute
-mapping and the bus-vs-p2p accounting.
+3-stage schedule — the same IR tables — expressed as SPMD collectives on
+a device axis of size ``K = k*q``. See DESIGN.md §3/§4 for the
+multicast -> collective mapping and the bus-vs-p2p accounting.
 
 Semantics
 ---------
@@ -21,14 +22,25 @@ batches for each of its ``q**(k-2)`` owned jobs; its input here is the
 Output per device: ``out : [J, d]`` — the fully-aggregated shard ``s`` of
 every job (reduce-scatter semantics, the paper's Reduce phase).
 
-All schedule indices are precomputed on host (numpy) into dense tables
-indexed by device id; inside shard_map they are selected with
-``lax.axis_index``. XOR coding operates on ``uint32`` bitcasts, so
-delivery is bit-exact for any payload.
+Execution modes
+---------------
+``mode="batched"`` (default) runs each of the ``k-1`` broadcast rounds
+of stages 1 and 2 as ONE grouped collective over every group at once —
+``2*(k-1)`` batched collectives total, independent of ``J``:
 
-Notation: for a coded group ``G`` and chunk-owner ``kp`` (the member that
-*misses* the chunk), ``pos(x, kp) = sorted(G \\ {kp}).index(x)`` is the
-packet index Algorithm 2 assigns to member ``x``.
+* ``router="all_to_all"`` — one ``lax.all_to_all`` per round (a single
+  ppermute cannot carry a round: each device must reach ``q`` peers,
+  see DESIGN.md §4).
+* ``router="ppermute"`` — ``q`` value-shift sub-permutations per round
+  (``2*(k-1)*q`` ppermutes, every byte on the wire useful).
+
+``mode="looped"`` is the legacy per-group schedule — ``(J + n_s2) *
+(k-1)`` tiny ppermutes — kept as the benchmark baseline
+(benchmarks/bench_schedule.py).
+
+XOR encode/decode run through the Pallas kernels in
+:mod:`repro.kernels.xor_code` when ``use_kernels`` is true (default: on
+TPU backends); the pure-jnp fold is used otherwise.
 """
 
 from __future__ import annotations
@@ -37,32 +49,54 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
 from .designs import ResolvableDesign, make_design
 from .placement import Placement, make_placement
+from .schedule import ShuffleProgram, StageTables, lower_program
 
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
-           "camr_collective_bytes"]
+           "camr_collective_bytes", "expected_collective_calls"]
 
 
 # --------------------------------------------------------------------- #
-# plan
+# plan — a thin handle on the compiled program
 # --------------------------------------------------------------------- #
 @dataclass(frozen=True, eq=False)
 class CAMRPlan:
     q: int
     k: int
     d: int                       # function-shard width (elements)
-    design: ResolvableDesign = field(repr=False)
-    placement: Placement = field(repr=False)
-    owned_jobs: np.ndarray = field(repr=False)       # [K, J_own]
-    stored_batches: np.ndarray = field(repr=False)   # [K, J_own, k-1]
-    s1_perms: tuple = field(repr=False)              # [J][k-1] perm lists
-    s2_groups: tuple = field(repr=False)
-    s3_perms: tuple = field(repr=False)              # [q-1] perm lists
+    program: ShuffleProgram = field(repr=False)
+
+    @property
+    def design(self) -> ResolvableDesign:
+        return self.program.design
+
+    @property
+    def placement(self) -> Placement:
+        return self.program.placement
+
+    @property
+    def owned_jobs(self) -> np.ndarray:
+        return self.program.owned_jobs
+
+    @property
+    def stored_batches(self) -> np.ndarray:
+        return self.program.stored_batches
+
+    @property
+    def s3_perms(self) -> tuple:
+        return self.program.s3_perms
+
+    @property
+    def s2_groups(self) -> tuple:
+        """Stage-2 groups as member tuples (rank order)."""
+        return tuple(self.program.group_members(int(r))
+                     for r in self.program.s2_rows)
 
     @property
     def K(self) -> int:
@@ -82,61 +116,17 @@ class CAMRPlan:
 
 
 def make_plan(q: int, k: int, d: int) -> CAMRPlan:
-    """Precompute the full SPMD schedule for a (q, k) CAMR cluster."""
+    """Lower the full SPMD schedule for a (q, k) CAMR cluster."""
     if k < 3:
         # k = 2 degenerates (single-packet chunks, blocks of size 1);
         # supported by the engine but not worth a coded TPU path.
         raise ValueError("TPU collective path requires k >= 3")
     if d % (k - 1):
-        raise ValueError(f"shard width d={d} must be divisible by k-1={k-1}")
+        raise ValueError(f"shard width d={d} must be divisible by k-1={k - 1}")
     design = make_design(q, k)
     pl = make_placement(design, gamma=1)
-    K, J_own = design.K, design.block_size
-
-    owned = np.zeros((K, J_own), dtype=np.int32)
-    stored = np.zeros((K, J_own, k - 1), dtype=np.int32)
-    for s in range(K):
-        jobs = design.owned_jobs(s)
-        for a, j in enumerate(jobs):
-            owned[s, a] = j
-            tmiss = pl.batch_of_label(j, s)
-            stored[s, a] = [t for t in range(k) if t != tmiss]
-
-    s1_perms = []
-    for j in range(design.J):
-        G = design.owners[j]
-        s1_perms.append(tuple(
-            tuple((G[p], G[(p + r) % k]) for p in range(k))
-            for r in range(1, k)))
-
-    s2_groups = []
-    for G in design.stage2_groups():
-        members = []
-        for kp in G:
-            Pset = tuple(s for s in G if s != kp)
-            j = design.common_job(Pset)
-            cls = design.class_of(kp)
-            (l,) = [u for u in design.owners[j] if design.class_of(u) == cls]
-            members.append(dict(server=kp, job=j,
-                                batch=pl.batch_of_label(j, l), classmate=l))
-        rounds = tuple(
-            tuple((G[p], G[(p + r) % k]) for p in range(k))
-            for r in range(1, k))
-        s2_groups.append(dict(group=G, members=tuple(members),
-                              rounds=rounds))
-
-    s3_perms = []
-    for o in range(1, q):
-        pairs = []
-        for i in range(k):
-            for l in range(q):
-                pairs.append((i * q + l, i * q + (l + o) % q))
-        s3_perms.append(tuple(pairs))
-
-    return CAMRPlan(q=q, k=k, d=d, design=design, placement=pl,
-                    owned_jobs=owned, stored_batches=stored,
-                    s1_perms=tuple(s1_perms), s2_groups=tuple(s2_groups),
-                    s3_perms=tuple(s3_perms))
+    program = lower_program(pl, Q=design.K, d=d)
+    return CAMRPlan(q=q, k=k, d=d, program=program)
 
 
 # --------------------------------------------------------------------- #
@@ -158,31 +148,119 @@ def _xor_reduce(x, axis):
     return lax.reduce(x, np.uint32(0), lax.bitwise_xor, (axis,))
 
 
-def _coded_exchange(axis_name, u32_chunks, valid, rounds_list,
-                    delta_pos, cancel_pos, cancel_mask,
-                    dec_gather, k, pk):
-    """Shared SPMD machinery of stages 1 and 2 (Algorithm 2 on a mesh axis).
+def _resolve_kernels(use_kernels) -> bool:
+    if use_kernels is None:  # Pallas on TPU; plain-jnp fold on CPU/GPU
+        return jax.default_backend() == "tpu"
+    return bool(use_kernels)
 
-    Parameters (per device; n = number of groups this stage runs):
-      u32_chunks  [n, k, d_u32]   chunk of each group member (0 where the
-                                  member is me or not computable)
-      valid       [n]             True where this device is in group
-      member_pos  [n]             my position in the group (-1 if absent)
-      delta_pos   [n, k]          pos(me, G[p]) for each chunk owner p
-      cancel_pos  [n, k-1, k]     pos(m_r, G[p]) for round r, chunk owner p
-      cancel_mask [n, k-1, k]     True where chunk owner p not in {m_r, me}
-      dec_gather  [n, k-1]        pos(m_r, me): slot of round-r packet in
-                                  my chunk
-    Returns decoded chunks [n, d_u32].
-    """
-    n = u32_chunks.shape[0]
-    packets = u32_chunks.reshape(n, k, k - 1, pk)
 
-    # sender side: Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row is zero)
+def _fold(pkts, use_kernels: bool):
+    """XOR-fold ``u32[n, m, pk]`` over axis 1 -> ``u32[n, pk]``."""
+    if use_kernels:
+        from repro.kernels.xor_code import xor_fold
+        return xor_fold(pkts)
+    return _xor_reduce(pkts, axis=1)
+
+
+def _decode(recv, pkts, mask, use_kernels: bool):
+    """``recv ^ fold(pkts where mask)`` — Lemma-2 receiver decode."""
+    if use_kernels:
+        from repro.kernels.xor_code import xor_decode
+        return xor_decode(recv, pkts, mask)
+    return recv ^ _xor_reduce(jnp.where(mask[..., None], pkts, 0), axis=1)
+
+
+# --------------------------------------------------------------------- #
+# the coded exchange (stages 1 and 2 share everything; the batched and
+# looped modes differ ONLY in how a round's packets move)
+# --------------------------------------------------------------------- #
+def _encode_stage(u32, T: StageTables, me, *, k, pk, use_kernels):
+    """Prologue shared by both modes: gather my chunk sources and fold
+    the sender-side Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row zero).
+
+    Returns (packets [n, k, k-1, pk], delta [n, pk])."""
+    def dev(tab):
+        return jnp.take(jnp.asarray(tab), me, axis=0)
+
+    n = T.n
+    chunks = u32[dev(T.src_jslot), dev(T.src_bslot), jnp.asarray(T.shard)]
+    chunks = jnp.where(dev(T.src_ok)[:, :, None], chunks, 0)  # [n, k, d]
+    packets = chunks.reshape(n, k, k - 1, pk)
     my_pkts = jnp.take_along_axis(
-        packets, delta_pos[:, :, None, None], axis=2)[:, :, 0]  # [n, k, pk]
-    delta = _xor_reduce(my_pkts, axis=1)                        # [n, pk]
+        packets, dev(T.delta_pos)[:, :, None, None], axis=2)[:, :, 0]
+    return packets, _fold(my_pkts, use_kernels)
 
+
+def _decode_stage(recv, packets, T: StageTables, me, *, k, pk, use_kernels):
+    """Epilogue shared by both modes: pkt(me, pos(m_r, me)) =
+    recv[r] XOR XOR_{p: G[p] not in {m_r, me}} pkt(G[p], pos(m_r, G[p])),
+    then reorder round packets into chunk slots."""
+    def dev(tab):
+        return jnp.take(jnp.asarray(tab), me, axis=0)
+
+    n = T.n
+    canc = jnp.take_along_axis(
+        packets[:, None].repeat(k - 1, axis=1),    # [n, k-1, k, k-1, pk]
+        dev(T.cancel_pos)[:, :, :, None, None], axis=3)[:, :, :, 0]
+    cmask = dev(T.cancel_mask)
+    dec = _decode(recv.reshape(n * (k - 1), pk),
+                  canc.reshape(n * (k - 1), k, pk),
+                  cmask.reshape(n * (k - 1), k),
+                  use_kernels).reshape(n, k - 1, pk)
+    order = jnp.argsort(dev(T.dec_gather), axis=1)
+    chunk = jnp.take_along_axis(dec, order[:, :, None], axis=1)
+    return chunk.reshape(n, (k - 1) * pk)
+
+
+def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
+                         q, k, K, pk, router, use_kernels):
+    """One coded stage as ``k-1`` grouped collectives (DESIGN.md §4).
+
+    Returns decoded chunks ``u32[n, d]`` — row order = the stage's group
+    rank order (stage 1: job order; stage 2: ``s2_ord`` ordinals).
+    """
+    def dev(tab):
+        return jnp.take(jnp.asarray(tab), me, axis=0)
+
+    R = int(T.R)
+    packets, delta = _encode_stage(u32, T, me, k=k, pk=pk,
+                                   use_kernels=use_kernels)
+    recv = []
+    for r in range(1, k):
+        if router == "all_to_all":
+            idx = dev(T.a2a_send[r - 1])                       # [K, R]
+            buf = jnp.where((idx >= 0)[:, :, None],
+                            delta[jnp.clip(idx, 0)], 0)        # [K, R, pk]
+            got = lax.all_to_all(buf, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)
+            flat = got.reshape(K * R, pk)
+            slot = dev(T.a2a_recv[r - 1])                      # [n]
+        elif router == "ppermute":
+            parts = []
+            for dd in range(q):
+                idx = dev(T.pp_send[r - 1, dd])                # [R]
+                buf = jnp.where((idx >= 0)[:, None],
+                                delta[jnp.clip(idx, 0)], 0)
+                parts.append(lax.ppermute(
+                    buf, axis_name, perm=list(T.pp_perms[r - 1][dd])))
+            flat = jnp.concatenate(parts, axis=0)              # [q*R, pk]
+            slot = dev(T.pp_recv[r - 1])
+        else:
+            raise ValueError(f"unknown router {router!r}")
+        recv.append(flat[slot])                                # [n, pk]
+    recv = jnp.stack(recv, axis=1)                             # [n, k-1, pk]
+    return _decode_stage(recv, packets, T, me, k=k, pk=pk,
+                         use_kernels=use_kernels)
+
+
+def _stage_coded_looped(axis_name, u32, T: StageTables, rounds_list, me, *,
+                        k, pk, use_kernels):
+    """Legacy exchange — one ppermute per group per round (benchmark
+    baseline; same tables, same encode/decode)."""
+    packets, delta = _encode_stage(u32, T, me, k=k, pk=pk,
+                                   use_kernels=use_kernels)
+    n = T.n
+    valid = jnp.take(jnp.asarray(T.valid), me, axis=0)
     recv = jnp.zeros((n, k - 1, pk), dtype=jnp.uint32)
     for gi in range(n):
         payload = jnp.where(valid[gi], delta[gi], 0)
@@ -191,182 +269,69 @@ def _coded_exchange(axis_name, u32_chunks, valid, rounds_list,
                                perm=list(rounds_list[gi][r - 1]))
             recv = recv.at[gi, r - 1].set(jnp.where(valid[gi], got,
                                                     recv[gi, r - 1]))
-
-    # receiver side: pkt(me, pos(m_r, me)) =
-    #   recv[r] XOR  XOR_{p: G[p] not in {m_r, me}} pkt(G[p], pos(m_r, G[p]))
-    canc = jnp.take_along_axis(
-        packets[:, None].repeat(k - 1, axis=1),       # [n, k-1, k, k-1, pk]
-        cancel_pos[:, :, :, None, None], axis=3)[:, :, :, 0]
-    canc = jnp.where(cancel_mask[:, :, :, None], canc, 0)
-    canc = _xor_reduce(canc, axis=2)                  # [n, k-1, pk]
-    dec = recv ^ canc                                 # [n, k-1, pk]
-    order = jnp.argsort(dec_gather, axis=1)
-    chunk = jnp.take_along_axis(dec, order[:, :, None], axis=1)
-    return chunk.reshape(n, (k - 1) * pk)
+    return _decode_stage(recv, packets, T, me, k=k, pk=pk,
+                         use_kernels=use_kernels)
 
 
 # --------------------------------------------------------------------- #
 # the SPMD shuffle body (runs inside shard_map over `axis_name`)
 # --------------------------------------------------------------------- #
 def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
-                 axis_name: str, debug: bool = False) -> jnp.ndarray:
+                 axis_name: str, mode: str = "batched",
+                 router: str = "all_to_all", use_kernels=None,
+                 debug: bool = False) -> jnp.ndarray:
     """3-stage CAMR coded shuffle: contribs [J_own, k-1, K, d] -> [J, d]."""
+    prog = plan.program
     q, k, K, J, J_own, d = (plan.q, plan.k, plan.K, plan.J, plan.J_own,
                             plan.d)
     dtype = contribs.dtype
     if contribs.shape != (J_own, k - 1, K, d):
         raise ValueError(f"contribs shape {contribs.shape} != "
                          f"{(J_own, k - 1, K, d)}")
+    if mode not in ("batched", "looped"):
+        raise ValueError(f"unknown mode {mode!r}")
+    use_kernels = _resolve_kernels(use_kernels)
     me = lax.axis_index(axis_name)
     pk = plan.packet_len
-    design, pl = plan.design, plan.placement
-    owners = design.owners
 
-    owned_list = [list(plan.owned_jobs[s]) for s in range(K)]
-    stored_list = [[list(plan.stored_batches[s, a])
-                    for a in range(J_own)] for s in range(K)]
-
-    def owned_index(s, j):
-        return owned_list[s].index(j)
-
-    def stored_index(s, j, t):
-        return stored_list[s][owned_index(s, j)].index(t)
-
-    def pos(x, G, kp):
-        return sorted(y for y in G if y != kp).index(x)
-
-    def dev(table):
-        return jnp.take(jnp.asarray(table), me, axis=0)
+    def dev(tab):
+        return jnp.take(jnp.asarray(tab), me, axis=0)
 
     u32 = _to_u32(contribs)  # [J_own, k-1, K, d]
 
-    # ================= stage 1: groups = owner sets ==================== #
-    # chunk owner p of group(j) = owners[j][p]; chunk = (batch t_p, shard p)
-    sb = np.zeros((K, J, k), dtype=np.int32)      # local batch idx
-    ss = np.zeros((K, J, k), dtype=np.int32)      # shard id
-    sj = np.zeros((K, J), dtype=np.int32)         # local job idx
-    sv = np.zeros((K, J, k), dtype=bool)
-    s_valid = np.zeros((K, J), dtype=bool)
-    s_mpos = np.zeros((K, J), dtype=np.int32)
-    s_dpos = np.zeros((K, J, k), dtype=np.int32)
-    s_cpos = np.zeros((K, J, k - 1, k), dtype=np.int32)
-    s_cmask = np.zeros((K, J, k - 1, k), dtype=bool)
-    s_dgath = np.zeros((K, J, k - 1), dtype=np.int32)
-    for jidx in range(J):
-        G = owners[jidx]
-        for s in G:
-            s_valid[s, jidx] = True
-            sj[s, jidx] = owned_index(s, jidx)
-            myp = G.index(s)
-            s_mpos[s, jidx] = myp
-            for p, kp in enumerate(G):
-                ss[s, jidx, p] = kp
-                if kp != s:
-                    t = pl.batch_of_label(jidx, kp)
-                    sb[s, jidx, p] = stored_index(s, jidx, t)
-                    sv[s, jidx, p] = True
-                    s_dpos[s, jidx, p] = pos(s, G, kp)
-            for r in range(1, k):
-                m = G[(myp - r) % k]
-                s_dgath[s, jidx, r - 1] = pos(m, G, s)
-                for p, kp in enumerate(G):
-                    if kp not in (m, s):
-                        s_cpos[s, jidx, r - 1, p] = pos(m, G, kp)
-                        s_cmask[s, jidx, r - 1, p] = True
+    # ========== stages 1 + 2: one shared coded-exchange machine ======== #
+    stage_vals = {}
+    for stage in (1, 2):
+        T = prog.stage_tables(stage)
+        if mode == "batched":
+            decoded = _stage_coded_batched(
+                axis_name, u32, T, me, q=q, k=k, K=K, pk=pk,
+                router=router, use_kernels=use_kernels)
+        else:
+            decoded = _stage_coded_looped(
+                axis_name, u32, T, prog.round_perms(stage), me,
+                k=k, pk=pk, use_kernels=use_kernels)
+        stage_vals[stage] = _from_u32(decoded, dtype)
+    stage1_val = stage_vals[1]   # [J, d]; row j valid where I own job j
+    stage2_val = stage_vals[2]   # [n_s2, d]; rows at my s2_ord ordinals
 
-    jb, jsh, jv = dev(sb), dev(ss), dev(sv)
-    jjl = dev(sj)
-    chunks = u32[jjl[:, None], jb, jsh]           # [J, k, d]
-    chunks = jnp.where(jv[:, :, None], chunks, 0)
-    dec1 = _coded_exchange(
-        axis_name, chunks, dev(s_valid),
-        [plan.s1_perms[jidx] for jidx in range(J)],
-        dev(s_dpos), dev(s_cpos), dev(s_cmask), dev(s_dgath), k, pk)
-    stage1_val = _from_u32(dec1, dtype)           # [J, d]; rows valid where
-    #                                               I own job j (my missing
-    #                                               batch aggregate, shard me)
-
-    # ================= stage 2: mixed groups =========================== #
-    n_g = len(plan.s2_groups)
-    gb = np.zeros((K, n_g, k), dtype=np.int32)
-    gjl = np.zeros((K, n_g, k), dtype=np.int32)
-    gsh = np.zeros((K, n_g, k), dtype=np.int32)
-    gv = np.zeros((K, n_g, k), dtype=bool)
-    g_valid = np.zeros((K, n_g), dtype=bool)
-    g_mpos = np.zeros((K, n_g), dtype=np.int32)
-    g_dpos = np.zeros((K, n_g, k), dtype=np.int32)
-    g_cpos = np.zeros((K, n_g, k - 1, k), dtype=np.int32)
-    g_cmask = np.zeros((K, n_g, k - 1, k), dtype=bool)
-    g_dgath = np.zeros((K, n_g, k - 1), dtype=np.int32)
-    for gi, g in enumerate(plan.s2_groups):
-        G = g["group"]
-        for s in G:
-            g_valid[s, gi] = True
-            myp = G.index(s)
-            g_mpos[s, gi] = myp
-            for p, mem in enumerate(g["members"]):
-                kp, j2, t2 = mem["server"], mem["job"], mem["batch"]
-                gsh[s, gi, p] = kp
-                if kp != s:
-                    gjl[s, gi, p] = owned_index(s, j2)
-                    gb[s, gi, p] = stored_index(s, j2, t2)
-                    gv[s, gi, p] = True
-                    g_dpos[s, gi, p] = pos(s, G, kp)
-            for r in range(1, k):
-                m = G[(myp - r) % k]
-                g_dgath[s, gi, r - 1] = pos(m, G, s)
-                for p, kp in enumerate(G):
-                    if kp not in (m, s):
-                        g_cpos[s, gi, r - 1, p] = pos(m, G, kp)
-                        g_cmask[s, gi, r - 1, p] = True
-
-    c2 = u32[dev(gjl), dev(gb), dev(gsh)]         # [n_g, k, d]
-    c2 = jnp.where(dev(gv)[:, :, None], c2, 0)
-    dec2 = _coded_exchange(
-        axis_name, c2, dev(g_valid),
-        [g["rounds"] for g in plan.s2_groups],
-        dev(g_dpos), dev(g_cpos), dev(g_cmask), dev(g_dgath), k, pk)
-    stage2_val = _from_u32(dec2, dtype)           # [n_g, d]
-
-    # ================= stage 3: intra-class unicasts ==================== #
+    # ========== stage 3: intra-class unicasts (q-1 full ppermutes) ===== #
     cls_base = (me // q) * q
     s3_out = jnp.zeros((q - 1, J_own, d), dtype=dtype)
     for o in range(1, q):
         dst = cls_base + (me % q + o) % q
         pay = jnp.take(contribs, dst, axis=2).sum(axis=1)   # [J_own, d]
-        got = lax.ppermute(pay, axis_name, perm=list(plan.s3_perms[o - 1]))
+        got = lax.ppermute(pay, axis_name, perm=list(prog.s3_perms[o - 1]))
         s3_out = s3_out.at[o - 1].set(got)
 
-    # ================= assemble ======================================== #
+    # ========== assemble (reduce-side tables of the program) ========== #
     own_sum = jnp.take(contribs, me, axis=2).sum(axis=1)    # [J_own, d]
+    d_isown = dev(prog.is_own)
+    d_slot = dev(prog.own_slot)
+    d_s2 = dev(prog.s2_ord)
+    d_s3 = dev(prog.s3_off)
 
-    s2_of_job = np.zeros((K, J), dtype=np.int32)
-    s3_off = np.zeros((K, J), dtype=np.int32)
-    is_own = np.zeros((K, J), dtype=bool)
-    own_slot = np.zeros((K, J), dtype=np.int32)
-    s2_lookup = {}
-    for gi, g in enumerate(plan.s2_groups):
-        for mem in g["members"]:
-            s2_lookup[(mem["server"], mem["job"])] = gi
-    for s in range(K):
-        for j in range(J):
-            if design.is_owner(s, j):
-                is_own[s, j] = True
-                own_slot[s, j] = owned_index(s, j)
-            else:
-                cls = design.class_of(s)
-                (l,) = [u for u in owners[j] if design.class_of(u) == cls]
-                # round o delivers from the class-mate at me-o (mod q)
-                s3_off[s, j] = (s - l) % q - 1
-                s2_of_job[s, j] = s2_lookup[(s, j)]
-                own_slot[s, j] = owned_index(l, j)
-
-    d_isown = dev(is_own)
-    d_slot = dev(own_slot)
-    d_s2 = dev(s2_of_job)
-    d_s3 = dev(s3_off)
-
-    owner_val = own_sum[d_slot] + stage1_val      # [J, d] (stage1 is [J, d])
+    owner_val = own_sum[d_slot] + stage1_val      # [J, d]
     s2_sel = stage2_val[d_s2]
     s3_sel = s3_out[d_s3, d_slot]
     nonowner_val = s2_sel + s3_sel
@@ -375,6 +340,18 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         return dict(out=out, stage1=stage1_val, stage2=s2_sel, stage3=s3_sel,
                     own_sum=own_sum[d_slot], is_own=d_isown)
     return out
+
+
+def expected_collective_calls(plan: CAMRPlan, mode: str = "batched",
+                              router: str = "all_to_all") -> dict[str, int]:
+    """Collectives per shuffle — what each mode traces (tested against
+    the jaxpr in tests/test_collective.py)."""
+    q, k = plan.q, plan.k
+    if mode == "batched":
+        s12 = 2 * (k - 1) if router == "all_to_all" else 2 * (k - 1) * q
+    else:
+        s12 = (plan.J + plan.program.n_s2) * (k - 1)
+    return dict(stage12=s12, stage3=q - 1, total=s12 + q - 1)
 
 
 # --------------------------------------------------------------------- #
@@ -430,7 +407,7 @@ def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4
     k, q, J, J_own, K, d = (plan.k, plan.q, plan.J, plan.J_own, plan.K,
                             plan.d)
     s1 = J * (k - 1) * pk_b * k            # J groups, k-1 rounds, k senders
-    s2 = len(plan.s2_groups) * (k - 1) * pk_b * k
+    s2 = plan.program.n_s2 * (k - 1) * pk_b * k
     s3 = (q - 1) * J_own * d * itemsize * K
     # uncoded alternative: psum of [J, K, d] dense gradient (ring):
     ring = 2 * (K - 1) * J * K * d * itemsize

@@ -19,14 +19,12 @@ import numpy as np
 
 from .designs import ResolvableDesign, make_design
 from .placement import Placement, make_placement
+from .schedule import ShuffleProgram, lower_program
 from .shuffle import (
     ShuffleTrace,
     Transmission,
     coded_multicast_schedule,
     decode_coded_multicast,
-    stage1_chunks,
-    stage2_chunks,
-    stage3_chunks,
 )
 
 __all__ = ["CAMRConfig", "CAMREngine", "run_wordcount_example"]
@@ -97,6 +95,10 @@ class CAMREngine:
         self.design: ResolvableDesign = make_design(cfg.q, cfg.k)
         self.placement: Placement = make_placement(
             self.design, cfg.gamma, label_perm=label_perm)
+        # the engine is a numpy interpreter of the compiled schedule —
+        # the SAME tables the SPMD collective executes (schedule.py)
+        self.program: ShuffleProgram = lower_program(
+            self.placement, Q=cfg.num_functions(), device_tables=False)
         self.map_fn = map_fn
         self.combine = combine
         self.trace = ShuffleTrace()
@@ -170,66 +172,75 @@ class CAMREngine:
             self._stage2(g)
             self._stage3(g)
 
-    def _coded_stage(self, stage: int, groups_chunks, fn_group: int) -> None:
-        """Common machinery for stages 1 and 2."""
+    def _run_coded_group(self, row: int, stage: int, fn_group: int) -> None:
+        """Algorithm 2 on one group row of the compiled program: encode
+        from holder aggregates, honest receiver-side decode."""
         K = self.cfg.K
-        for G, chunk_specs in groups_chunks.items():
-            # true chunk values, computed from any holder's map outputs and
-            # cross-checked across all holders (deterministic map).
-            chunks: dict[int, bytes] = {}
-            for c in chunk_specs:
-                qf = fn_group * K + c.qfunc
-                holders = [s for s in G if s != c.receiver]
-                vals = [self.servers[h].agg[(c.job, c.batch)][qf]
-                        for h in holders]
-                for v in vals[1:]:
-                    np.testing.assert_array_equal(vals[0], v)
-                chunks[c.receiver] = self._ser(vals[0])
-            txs = coded_multicast_schedule(
-                G, chunks, stage=stage, tag=("group", G, "fn", fn_group))
-            for t in txs:
-                self.trace.add(t)
-            # honest decode at every receiver, from ITS OWN aggregates
-            clen = len(next(iter(chunks.values())))
-            for c in chunk_specs:
-                r = c.receiver
-                known = {}
-                for c2 in chunk_specs:
-                    if c2.receiver == r:
-                        continue
-                    qf2 = fn_group * K + c2.qfunc
-                    own = self.servers[r].agg.get((c2.job, c2.batch))
-                    if own is None:
-                        raise AssertionError(
-                            "Lemma-2 condition violated: receiver cannot "
-                            "recompute a cancellation chunk")
-                    known[c2.receiver] = self._ser(own[qf2])
-                dec = decode_coded_multicast(G, r, txs, known, clen)
-                arr = self._de(dec)
-                qf = fn_group * K + c.qfunc
-                self.servers[r].recv_batch[(c.job, c.batch, qf)] = arr
+        prog = self.program
+        G = prog.group_members(row)
+        specs = prog.coded_chunks(row)           # [(receiver, job, batch)]
+        # true chunk values, computed from any holder's map outputs and
+        # cross-checked across all holders (deterministic map).
+        chunks: dict[int, bytes] = {}
+        for kp, job, batch in specs:
+            qf = fn_group * K + kp
+            holders = [s for s in G if s != kp]
+            vals = [self.servers[h].agg[(job, batch)][qf]
+                    for h in holders]
+            for v in vals[1:]:
+                np.testing.assert_array_equal(vals[0], v)
+            chunks[kp] = self._ser(vals[0])
+        txs = coded_multicast_schedule(
+            G, chunks, stage=stage, tag=("group", G, "fn", fn_group))
+        for t in txs:
+            self.trace.add(t)
+        # honest decode at every receiver, from ITS OWN aggregates
+        clen = len(next(iter(chunks.values())))
+        for kp, job, batch in specs:
+            known = {}
+            for kp2, job2, batch2 in specs:
+                if kp2 == kp:
+                    continue
+                qf2 = fn_group * K + kp2
+                own = self.servers[kp].agg.get((job2, batch2))
+                if own is None:
+                    raise AssertionError(
+                        "Lemma-2 condition violated: receiver cannot "
+                        "recompute a cancellation chunk")
+                known[kp2] = self._ser(own[qf2])
+            dec = decode_coded_multicast(G, kp, txs, known, clen)
+            qf = fn_group * K + kp
+            self.servers[kp].recv_batch[(job, batch, qf)] = self._de(dec)
+
+    def _coded_stage(self, stage: int, fn_group: int) -> None:
+        """Interpret stages 1/2 of the program (shared machinery)."""
+        for row in self.program.stage_rows(stage):
+            self._run_coded_group(int(row), stage, fn_group)
 
     def _stage1(self, fn_group: int) -> None:
-        self._coded_stage(1, stage1_chunks(self.placement), fn_group)
+        self._coded_stage(1, fn_group)
 
     def _stage2(self, fn_group: int) -> None:
-        self._coded_stage(2, stage2_chunks(self.placement), fn_group)
+        self._coded_stage(2, fn_group)
 
     def _stage3(self, fn_group: int) -> None:
         K = self.cfg.K
-        for spec in stage3_chunks(self.placement):
-            qf = fn_group * K + spec.receiver
-            sender_st = self.servers[spec.sender]
+        prog = self.program
+        for i in range(len(prog.s3_job)):
+            job = int(prog.s3_job[i])
+            rcv = int(prog.s3_recv[i])
+            snd = int(prog.s3_send[i])
+            qf = fn_group * K + rcv
+            sender_st = self.servers[snd]
             acc = None
-            for t in spec.batches:
-                v = sender_st.agg[(spec.job, t)][qf]
+            for t in prog.s3_batches[i]:
+                v = sender_st.agg[(job, int(t))][qf]
                 acc = v if acc is None else self.combine(acc, v)
             payload = self._ser(acc)
             self.trace.add(Transmission(
-                stage=3, sender=spec.sender, receivers=(spec.receiver,),
-                payload=payload, tag=("job", spec.job, "fn", fn_group)))
-            self.servers[spec.receiver].recv_rest[(spec.job, qf)] = \
-                self._de(payload)
+                stage=3, sender=snd, receivers=(rcv,),
+                payload=payload, tag=("job", job, "fn", fn_group)))
+            self.servers[rcv].recv_rest[(job, qf)] = self._de(payload)
 
     def reduce_phase(self) -> list[dict[tuple[int, int], np.ndarray]]:
         pl, d = self.placement, self.design

@@ -1,0 +1,593 @@
+"""ShuffleProgram — the compiled IR of the CAMR 3-stage coded shuffle.
+
+One lowering of ``(Placement, Q, d)`` produces dense numpy tables that
+every executor consumes (DESIGN.md §5):
+
+* :class:`repro.core.engine.CAMREngine` — numpy interpreter (the oracle),
+* :func:`repro.core.collective.camr_shuffle` — SPMD shard_map executor,
+* :class:`repro.runtime.fault.DegradedCAMREngine` — re-lowered degraded
+  schedule for a surviving server set.
+
+The key structural fact the IR exploits: stage-1 groups (owner sets of a
+job) and stage-2 groups both contain exactly one server per parallel
+class, so a group IS a value vector ``v in Z_q^k`` (member of class ``i``
+is server ``i*q + v_i``). The ``q**k`` value vectors split by parity:
+
+* ``sum(v[:-1]) % q == v[-1]``  -> the vector is an SPC codeword, the
+  group is the owner set of job ``rank(v[:-1])``  (stage 1),
+* otherwise                     -> a stage-2 group of paper §III-C.2.
+
+This unification is what lets stages 1 and 2 share one table builder and
+one batched per-round exchange (the seed implementation duplicated ~200
+lines between the engine and the collective, and issued one ppermute per
+group per round).
+
+Batched round routing
+---------------------
+In broadcast round ``r`` (of ``k-1``), the class-``i`` member of EVERY
+group sends its coded packet Δ to the class-``(i+r) % k`` member.  A
+device must therefore deliver to ``q`` distinct peers per round, so a
+single ``lax.ppermute`` per round cannot carry the traffic (a ppermute
+moves each device's payload to exactly ONE destination).  The program
+precomputes two equivalent routings (DESIGN.md §4):
+
+* ``all_to_all`` — one ``lax.all_to_all`` per round: device ``u`` sends,
+  for each destination ``w``, the block of packets for the groups where
+  ``u`` and ``w`` are round-``r`` partners.  Exactly ``k-1`` collectives
+  per stage, independent of ``J``.
+* ``ppermute`` — ``q`` sub-rounds per round: sub-round ``δ`` uses the
+  global device permutation ``(i, l) -> ((i+r) % k, (l+δ) % q)`` and
+  carries the groups whose round-``r`` value shift equals ``δ``.  Every
+  byte on the wire is useful (no zero blocks), at ``q`` ppermutes per
+  round.
+
+Both routings share the block lists: for an ordered device pair
+``(u, w)`` with classes ``i_u != i_w``, the groups where ``u`` sends to
+``w`` in round ``r = (i_w - i_u) % k`` are the value vectors with
+``v[i_u] = val(u)`` and ``v[i_w] = val(w)`` — exactly ``q**(k-3)`` of
+them in stage 1 and ``q**(k-3) * (q-1)`` in stage 2, sorted by group
+rank so sender and receiver agree on row order.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import numpy as np
+
+from .designs import ResolvableDesign
+from .placement import Placement
+
+__all__ = [
+    "StageTables",
+    "ShuffleProgram",
+    "lower_program",
+    "DegradedProgram",
+    "lower_degraded",
+]
+
+
+# --------------------------------------------------------------------- #
+# group <-> value-vector ranking
+# --------------------------------------------------------------------- #
+def _group_rank(v: tuple[int, ...], q: int) -> int:
+    g = 0
+    for x in v:
+        g = g * q + int(x)
+    return g
+
+
+def _rank_to_vec(g: int, q: int, k: int) -> tuple[int, ...]:
+    out = []
+    for _ in range(k):
+        out.append(g % q)
+        g //= q
+    return tuple(reversed(out))
+
+
+# --------------------------------------------------------------------- #
+# per-stage device tables
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True, eq=False)
+class StageTables:
+    """Dense tables for one coded stage (1 or 2) of the shuffle.
+
+    ``n`` = number of groups in the stage; all index tables are host
+    numpy, gathered per-device with ``lax.axis_index`` inside shard_map.
+    """
+
+    stage: int
+    rows: np.ndarray          # [n]            global group-row ids (rank order)
+    R: np.ndarray | int = 0   # rows per (sender, receiver) routing block
+
+    # membership / chunk sources (contribs coords: local job & batch slot)
+    valid: np.ndarray = field(default=None, repr=False)      # [K, n] bool
+    src_jslot: np.ndarray = field(default=None, repr=False)  # [K, n, k]
+    src_bslot: np.ndarray = field(default=None, repr=False)  # [K, n, k]
+    src_ok: np.ndarray = field(default=None, repr=False)     # [K, n, k] bool
+    shard: np.ndarray = field(default=None, repr=False)      # [n, k] server id
+
+    # Algorithm-2 positions (pos(x, G, kp) over sorted(G \ {kp}))
+    delta_pos: np.ndarray = field(default=None, repr=False)  # [K, n, k]
+    cancel_pos: np.ndarray = field(default=None, repr=False)  # [K, n, k-1, k]
+    cancel_mask: np.ndarray = field(default=None, repr=False)  # [K, n, k-1, k]
+    dec_gather: np.ndarray = field(default=None, repr=False)  # [K, n, k-1]
+
+    # batched round routing (see module docstring)
+    a2a_send: np.ndarray = field(default=None, repr=False)   # [k-1, K, K, R]
+    a2a_recv: np.ndarray = field(default=None, repr=False)   # [k-1, K, n]
+    pp_send: np.ndarray = field(default=None, repr=False)    # [k-1, q, K, R]
+    pp_recv: np.ndarray = field(default=None, repr=False)    # [k-1, K, n]
+    pp_perms: tuple = field(default=(), repr=False)          # [k-1][q] pairs
+
+    @property
+    def n(self) -> int:
+        return len(self.rows)
+
+
+# --------------------------------------------------------------------- #
+# the program
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True, eq=False)
+class ShuffleProgram:
+    """Compiled CAMR shuffle schedule (see module docstring)."""
+
+    q: int
+    k: int
+    Q: int                                   # number of reduce functions
+    design: ResolvableDesign = field(repr=False)
+    placement: Placement = field(repr=False)
+
+    # unified group table over stages 1+2: n_groups = q**k rows
+    group_vals: np.ndarray = field(repr=False)   # [n_groups, k] value vecs
+    groups: np.ndarray = field(repr=False)       # [n_groups, k] server ids
+    stage_of: np.ndarray = field(repr=False)     # [n_groups] in {1, 2}
+    chunk_job: np.ndarray = field(repr=False)    # [n_groups, k]
+    chunk_batch: np.ndarray = field(repr=False)  # [n_groups, k]
+    chunk_aux: np.ndarray = field(repr=False)    # [n_groups, k] classmate
+    #                                              owner (stage 2), else -1
+    s1_rows: np.ndarray = field(repr=False)      # [J] row of job j's group
+    s2_rows: np.ndarray = field(repr=False)      # [n_s2] rows, rank order
+
+    # local storage layout (device s's contribs rows)
+    owned_jobs: np.ndarray = field(repr=False)       # [K, J_own]
+    stored_batches: np.ndarray = field(repr=False)   # [K, J_own, k-1]
+
+    # stage 3 unicasts
+    s3_job: np.ndarray = field(repr=False)       # [n3]
+    s3_recv: np.ndarray = field(repr=False)      # [n3]
+    s3_send: np.ndarray = field(repr=False)      # [n3]
+    s3_batches: np.ndarray = field(repr=False)   # [n3, k-1]
+    s3_perms: tuple = field(repr=False)          # [q-1] intra-class shifts
+
+    # reduce-side assembly
+    is_own: np.ndarray = field(repr=False)       # [K, J] bool
+    own_slot: np.ndarray = field(repr=False)     # [K, J] local job slot
+    s2_ord: np.ndarray = field(repr=False)       # [K, J] stage-2 ordinal
+    s3_off: np.ndarray = field(repr=False)       # [K, J] stage-3 round idx
+
+    # SPMD tables (None when lowered with device_tables=False)
+    s1: StageTables | None = field(repr=False, default=None)
+    s2: StageTables | None = field(repr=False, default=None)
+    d: int | None = None                         # SPMD shard width
+
+    # ------------------------------------------------------------------ #
+    @property
+    def K(self) -> int:
+        return self.q * self.k
+
+    @property
+    def J(self) -> int:
+        return self.q ** (self.k - 1)
+
+    @property
+    def J_own(self) -> int:
+        return self.q ** (self.k - 2)
+
+    @property
+    def n_groups(self) -> int:
+        return self.q ** self.k
+
+    @property
+    def n_s2(self) -> int:
+        return self.n_groups - self.J
+
+    @property
+    def packet_len(self) -> int:
+        if self.d is None:
+            raise ValueError("program lowered without device tables")
+        return self.d // (self.k - 1)
+
+    @property
+    def n_batched_collectives(self) -> int:
+        """Batched collectives issued for stages 1+2 (all_to_all router)."""
+        return 2 * (self.k - 1)
+
+    def stage_tables(self, stage: int) -> StageTables:
+        t = self.s1 if stage == 1 else self.s2
+        if t is None:
+            raise ValueError("program lowered without device tables")
+        return t
+
+    def stage_rows(self, stage: int) -> np.ndarray:
+        return self.s1_rows if stage == 1 else self.s2_rows
+
+    def group_members(self, row: int) -> tuple[int, ...]:
+        return tuple(int(x) for x in self.groups[row])
+
+    def round_perms(self, stage: int) -> tuple:
+        """Per-group per-round (src, dst) pairs for the LOOPED legacy
+        router: round ``r`` sends ``G[p] -> G[(p+r) % k]``."""
+        k = self.k
+        out = []
+        for row in self.stage_rows(stage):
+            G = self.group_members(int(row))
+            out.append(tuple(
+                tuple((G[p], G[(p + r) % k]) for p in range(k))
+                for r in range(1, k)))
+        return tuple(out)
+
+    def coded_chunks(self, row: int) -> list[tuple[int, int, int]]:
+        """[(receiver, job, batch)] for one group row — engine view."""
+        return [
+            (int(self.groups[row, p]), int(self.chunk_job[row, p]),
+             int(self.chunk_batch[row, p]))
+            for p in range(self.k)
+        ]
+
+
+# --------------------------------------------------------------------- #
+# lowering
+# --------------------------------------------------------------------- #
+@lru_cache(maxsize=64)  # Placement hashes by identity (frozen, eq=False);
+#                         bounded: long-lived replanning loops build fresh
+#                         placements and must not pin every program forever
+def lower_program(placement: Placement, Q: int | None = None,
+                  d: int | None = None, *,
+                  device_tables: bool = True) -> ShuffleProgram:
+    """Lower ``(Placement, Q, d)`` into a :class:`ShuffleProgram`.
+
+    ``d`` (SPMD function-shard width, elements) is only required for the
+    collective executor; the engine interprets the schedule tables alone
+    (``device_tables=False`` skips the [K, n, ...] SPMD tables).
+    """
+    design = placement.design
+    q, k, K, J = design.q, design.k, design.K, design.J
+    Q = K if Q is None else Q
+    if Q % K:
+        raise ValueError("Q must be a multiple of K")
+    if d is not None and d % (k - 1):
+        raise ValueError(f"shard width d={d} must be divisible by "
+                         f"k-1={k - 1}")
+
+    n_groups = q ** k
+    group_vals = np.zeros((n_groups, k), dtype=np.int32)
+    groups = np.zeros((n_groups, k), dtype=np.int32)
+    stage_of = np.zeros(n_groups, dtype=np.int32)
+    chunk_job = np.zeros((n_groups, k), dtype=np.int32)
+    chunk_batch = np.zeros((n_groups, k), dtype=np.int32)
+    chunk_aux = np.full((n_groups, k), -1, dtype=np.int32)
+    s1_rows, s2_rows = [], []
+
+    for g in range(n_groups):
+        v = _rank_to_vec(g, q, k)
+        group_vals[g] = v
+        G = tuple(design.server_of(i, v[i]) for i in range(k))
+        groups[g] = G
+        if sum(v[:-1]) % q == v[-1]:
+            stage_of[g] = 1
+            j = _group_rank(v[:-1], q)           # job = message rank
+            assert design.owners[j] == G
+            s1_rows.append(g)
+            for p, kp in enumerate(G):
+                chunk_job[g, p] = j
+                chunk_batch[g, p] = placement.batch_of_label(j, kp)
+        else:
+            stage_of[g] = 2
+            s2_rows.append(g)
+            for p, kp in enumerate(G):
+                Pset = tuple(s for s in G if s != kp)
+                j = design.common_job(Pset)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == p]
+                t = placement.batch_of_label(j, l)
+                # Lemma-2 condition: every other member stores that batch
+                assert all(placement.stores(s, j, t) for s in Pset), \
+                    "stage-2 storage condition"
+                chunk_job[g, p] = j
+                chunk_batch[g, p] = t
+                chunk_aux[g, p] = l
+
+    s1_rows = np.asarray(s1_rows, dtype=np.int32)
+    s2_rows = np.asarray(s2_rows, dtype=np.int32)
+    assert len(s1_rows) == J
+
+    # -- local storage layout ------------------------------------------- #
+    J_own = design.block_size
+    owned = np.zeros((K, J_own), dtype=np.int32)
+    stored = np.zeros((K, J_own, k - 1), dtype=np.int32)
+    owned_index = {}
+    stored_index = {}
+    for s in range(K):
+        for a, j in enumerate(design.owned_jobs(s)):
+            owned[s, a] = j
+            owned_index[(s, j)] = a
+            tmiss = placement.batch_of_label(j, s)
+            row = [t for t in range(k) if t != tmiss]
+            stored[s, a] = row
+            for b, t in enumerate(row):
+                stored_index[(s, j, t)] = b
+
+    # -- stage 3 -------------------------------------------------------- #
+    s3_job, s3_recv, s3_send, s3_batches = [], [], [], []
+    for i in range(k):
+        cls = design.parallel_class(i)
+        for m in cls:
+            for u in cls:
+                if u == m:
+                    continue
+                for j in design.owned_jobs(u):
+                    tu = placement.batch_of_label(j, u)
+                    s3_job.append(j)
+                    s3_recv.append(m)
+                    s3_send.append(u)
+                    s3_batches.append([t for t in range(k) if t != tu])
+    s3_job = np.asarray(s3_job, dtype=np.int32)
+    s3_recv = np.asarray(s3_recv, dtype=np.int32)
+    s3_send = np.asarray(s3_send, dtype=np.int32)
+    s3_batches = np.asarray(s3_batches, dtype=np.int32).reshape(-1, k - 1)
+    assert len(s3_job) == K * (J - J_own)
+
+    s3_perms = []
+    for o in range(1, q):
+        pairs = []
+        for i in range(k):
+            for l in range(q):
+                pairs.append((i * q + l, i * q + (l + o) % q))
+        s3_perms.append(tuple(pairs))
+
+    # -- reduce-side assembly ------------------------------------------- #
+    is_own = np.zeros((K, J), dtype=bool)
+    own_slot = np.zeros((K, J), dtype=np.int32)
+    s2_ord = np.zeros((K, J), dtype=np.int32)
+    s3_off = np.zeros((K, J), dtype=np.int32)
+    s2_lookup = {}
+    for gi, g in enumerate(s2_rows):
+        for p in range(k):
+            s2_lookup[(int(groups[g, p]), int(chunk_job[g, p]))] = gi
+    for s in range(K):
+        for j in range(J):
+            if design.is_owner(s, j):
+                is_own[s, j] = True
+                own_slot[s, j] = owned_index[(s, j)]
+            else:
+                cls = design.class_of(s)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == cls]
+                s3_off[s, j] = (s - l) % q - 1
+                s2_ord[s, j] = s2_lookup[(s, j)]
+                own_slot[s, j] = owned_index[(l, j)]
+
+    prog = dict(
+        q=q, k=k, Q=Q, design=design, placement=placement,
+        group_vals=group_vals, groups=groups, stage_of=stage_of,
+        chunk_job=chunk_job, chunk_batch=chunk_batch, chunk_aux=chunk_aux,
+        s1_rows=s1_rows, s2_rows=s2_rows,
+        owned_jobs=owned, stored_batches=stored,
+        s3_job=s3_job, s3_recv=s3_recv, s3_send=s3_send,
+        s3_batches=s3_batches, s3_perms=tuple(s3_perms),
+        is_own=is_own, own_slot=own_slot, s2_ord=s2_ord, s3_off=s3_off,
+        d=d,
+    )
+    if not device_tables:
+        return ShuffleProgram(**prog)
+
+    s1 = _lower_stage(1, s1_rows, groups, chunk_job, chunk_batch,
+                      group_vals, q, k, K, owned_index, stored_index)
+    s2 = _lower_stage(2, s2_rows, groups, chunk_job, chunk_batch,
+                      group_vals, q, k, K, owned_index, stored_index)
+    return ShuffleProgram(s1=s1, s2=s2, **prog)
+
+
+def _lower_stage(stage, rows, groups, chunk_job, chunk_batch, group_vals,
+                 q, k, K, owned_index, stored_index) -> StageTables:
+    """Build the SPMD tables of one coded stage.
+
+    Groups are class-ordered tuples of strictly increasing server ids, so
+    ``sorted(G \\ {kp})`` is just ``G`` with ``kp`` removed — the
+    Algorithm-2 packet position of member ``x`` w.r.t. chunk owner at
+    position ``p_kp`` is ``p_x - (p_x > p_kp)``.
+    """
+    n = len(rows)
+    valid = np.zeros((K, n), dtype=bool)
+    src_jslot = np.zeros((K, n, k), dtype=np.int32)
+    src_bslot = np.zeros((K, n, k), dtype=np.int32)
+    src_ok = np.zeros((K, n, k), dtype=bool)
+    shard = np.zeros((n, k), dtype=np.int32)
+    delta_pos = np.zeros((K, n, k), dtype=np.int32)
+    cancel_pos = np.zeros((K, n, k - 1, k), dtype=np.int32)
+    cancel_mask = np.zeros((K, n, k - 1, k), dtype=bool)
+    dec_gather = np.zeros((K, n, k - 1), dtype=np.int32)
+
+    def pos(p_x, p_kp):
+        return p_x - (1 if p_x > p_kp else 0)
+
+    for li, g in enumerate(rows):
+        G = [int(x) for x in groups[g]]
+        shard[li] = G
+        for myp, s in enumerate(G):
+            valid[s, li] = True
+            for p, kp in enumerate(G):
+                if kp == s:
+                    continue
+                j, t = int(chunk_job[g, p]), int(chunk_batch[g, p])
+                src_jslot[s, li, p] = owned_index[(s, j)]
+                src_bslot[s, li, p] = stored_index[(s, j, t)]
+                src_ok[s, li, p] = True
+                delta_pos[s, li, p] = pos(myp, p)
+            for r in range(1, k):
+                mp = (myp - r) % k
+                dec_gather[s, li, r - 1] = pos(mp, myp)
+                for p in range(k):
+                    if p not in (mp, myp):
+                        cancel_pos[s, li, r - 1, p] = pos(mp, p)
+                        cancel_mask[s, li, r - 1, p] = True
+
+    # -- routing blocks: shared by both routers ------------------------- #
+    # rows per ordered (sender, receiver) pair: fixing two coordinates of
+    # the value vector leaves q^(k-3) stage-1 / q^(k-3)*(q-1) stage-2
+    # groups — uniform over pairs, so R is exact (asserted below).
+    R = q ** (k - 3) if k >= 3 else 1
+    if stage == 2:
+        R *= q - 1
+    a2a_send = np.full((k - 1, K, K, R), -1, dtype=np.int32)
+    a2a_recv = np.zeros((k - 1, K, n), dtype=np.int32)
+    pp_send = np.full((k - 1, q, K, R), -1, dtype=np.int32)
+    pp_recv = np.zeros((k - 1, K, n), dtype=np.int32)
+    pp_perms = []
+    counts = {}
+    for r in range(1, k):
+        counts.clear()
+        for li, g in enumerate(rows):
+            G = [int(x) for x in groups[g]]
+            for iu, u in enumerate(G):
+                w = G[(iu + r) % k]
+                idx = counts.get((u, w), 0)
+                counts[(u, w)] = idx + 1
+                assert idx < R
+                a2a_send[r - 1, u, w, idx] = li
+                a2a_recv[r - 1, w, li] = u * R + idx
+                delta = ((w % q) - (u % q)) % q
+                pp_send[r - 1, delta, u, idx] = li
+                pp_recv[r - 1, w, li] = delta * R + idx
+        perms_r = []
+        for delta in range(q):
+            pairs = []
+            for i in range(k):
+                for l in range(q):
+                    src = i * q + l
+                    dst = ((i + r) % k) * q + (l + delta) % q
+                    pairs.append((src, dst))
+            perms_r.append(tuple(pairs))
+        pp_perms.append(tuple(perms_r))
+
+    return StageTables(
+        stage=stage, rows=np.asarray(rows, dtype=np.int32), R=R,
+        valid=valid,
+        src_jslot=src_jslot, src_bslot=src_bslot, src_ok=src_ok,
+        shard=shard, delta_pos=delta_pos,
+        cancel_pos=cancel_pos, cancel_mask=cancel_mask,
+        dec_gather=dec_gather,
+        a2a_send=a2a_send, a2a_recv=a2a_recv,
+        pp_send=pp_send, pp_recv=pp_recv, pp_perms=tuple(pp_perms),
+    )
+
+
+# --------------------------------------------------------------------- #
+# degraded lowering (fault runtime)
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DegradedProgram:
+    """Schedule re-lowered for a surviving server set.
+
+    ``coded_rows``    group rows whose members are all live: run
+                      Algorithm 2 unchanged.
+    ``uncoded``       per degraded group row, the uncoded unicast plan:
+                      tuples ``(sender, receiver, job, batch, owner)``
+                      where ``owner`` is the ORIGINAL chunk receiver
+                      (its id is the reduce-function index).
+    ``s3``            stage-3 sends ``(sender, receiver, job, owner,
+                      batches)``; several entries may share a
+                      ``(receiver, job, owner)`` key — the executor
+                      combines them.
+    """
+
+    base: ShuffleProgram
+    failed: frozenset
+    migrate: np.ndarray                  # [K] takeover server ids
+    coded_rows: tuple
+    uncoded: tuple                       # [(row, sends)]
+    s3: tuple
+
+
+def lower_degraded(program: ShuffleProgram,
+                   failed: set[int]) -> DegradedProgram:
+    """Re-lower ``program`` for the live servers ``K \\ failed``.
+
+    Raises ``ValueError`` when the loss exceeds what the placement
+    redundancy can absorb (same conditions the paper's recovery needs).
+    """
+    design, pl = program.design, program.placement
+    q, k, K = program.q, program.k, program.K
+    failed = frozenset(failed)
+    if k < 3:
+        raise ValueError("degraded recovery requires k >= 3 (k = 2 "
+                         "leaves single-holder batches)")
+    for i in range(k):
+        cls = set(design.parallel_class(i))
+        if len(cls & failed) > 1:
+            raise ValueError(
+                "multiple failures in one parallel class need map "
+                "recompute (not just shuffle recovery)")
+    for j in range(design.J):
+        for t in range(k):
+            if set(pl.holders(j, t)) <= failed:
+                raise ValueError(
+                    f"batch (job {j}, batch {t}) lost all {k - 1} "
+                    "replicas — data loss, not recoverable by the "
+                    "shuffle (re-map from the master copy required)")
+
+    migrate = np.arange(K, dtype=np.int32)
+    for s in sorted(failed):
+        cls = design.parallel_class(design.class_of(s))
+        migrate[s] = next(c for c in cls if c not in failed)
+
+    coded_rows, uncoded = [], []
+    for row in range(program.n_groups):
+        G = program.group_members(row)
+        if not (set(G) & failed):
+            coded_rows.append(row)
+            continue
+        sends = []
+        for p, (kp, j, t) in zip(range(k), program.coded_chunks(row)):
+            rcv = int(migrate[kp])
+            holder = next(s for s in G if s != kp and s not in failed)
+            sends.append((holder, rcv, j, t, kp))
+        uncoded.append((row, tuple(sends)))
+
+    s3 = []
+    for i in range(len(program.s3_job)):
+        j = int(program.s3_job[i])
+        m = int(program.s3_recv[i])
+        u = int(program.s3_send[i])
+        batches = tuple(int(t) for t in program.s3_batches[i])
+        rcv = int(migrate[m])
+        if u not in failed:
+            s3.append((u, rcv, j, m, batches))
+        else:
+            for t in batches:
+                holder = next(h for h in pl.holders(j, t)
+                              if h not in failed)
+                s3.append((holder, rcv, j, m, (t,)))
+    # migration fill: the takeover of failed f additionally needs, per
+    # job f OWNED, the aggregate of the k-1 batches f held locally.
+    for f in sorted(failed):
+        s = int(migrate[f])
+        for j in design.owned_jobs(f):
+            tf = pl.batch_of_label(j, f)
+            rest = [t for t in range(k) if t != tf]
+            l1 = next(u for u in design.owners[j] if u not in failed)
+            t1 = pl.batch_of_label(j, l1)
+            part = tuple(t for t in rest if t != t1)
+            if part:
+                s3.append((l1, s, j, f, part))
+            if t1 in rest:
+                h2 = next(h for h in pl.holders(j, t1)
+                          if h not in failed)
+                s3.append((h2, s, j, f, (t1,)))
+
+    return DegradedProgram(
+        base=program, failed=failed, migrate=migrate,
+        coded_rows=tuple(coded_rows), uncoded=tuple(uncoded),
+        s3=tuple(s3))

@@ -245,59 +245,55 @@ class Stage3Chunk:
 
 
 def stage1_chunks(pl: Placement) -> dict[tuple[int, ...], list[Stage1Chunk]]:
-    """Group (= owner set) -> chunks, one per owner."""
-    d = pl.design
+    """Group (= owner set) -> chunks, one per owner.
+
+    A read-only view over the compiled :class:`ShuffleProgram` tables —
+    the IR in :mod:`repro.core.schedule` is the single source of truth
+    for WHICH aggregate flows where.
+    """
+    from .schedule import lower_program
+    prog = lower_program(pl, device_tables=False)
     out: dict[tuple[int, ...], list[Stage1Chunk]] = {}
-    for j in range(d.J):
-        G = d.owners[j]
+    for row in prog.s1_rows:
+        G = prog.group_members(int(row))
         out[G] = [
-            Stage1Chunk(job=j, receiver=kp, batch=pl.batch_of_label(j, kp))
-            for kp in G
+            Stage1Chunk(job=j, receiver=kp, batch=t)
+            for kp, j, t in prog.coded_chunks(int(row))
         ]
     return out
 
 
 def stage2_chunks(pl: Placement) -> dict[tuple[int, ...], list[Stage2Chunk]]:
-    """Stage-2 group -> chunks, one per member (paper §III-C.2)."""
-    d = pl.design
+    """Stage-2 group -> chunks, one per member (paper §III-C.2).
+
+    View over the :class:`ShuffleProgram` tables, like
+    :func:`stage1_chunks`.
+    """
+    from .schedule import lower_program
+    prog = lower_program(pl, device_tables=False)
     out: dict[tuple[int, ...], list[Stage2Chunk]] = {}
-    for G in d.stage2_groups():
-        lst = []
-        for kp in G:
-            P = tuple(s for s in G if s != kp)
-            j = d.common_job(P)
-            assert not d.is_owner(kp, j)
-            # the remaining owner lies in kp's parallel class
-            cls = d.class_of(kp)
-            (l,) = [s for s in d.owners[j] if d.class_of(s) == cls]
-            assert l != kp
-            t = pl.batch_of_label(j, l)
-            # Lemma-2 condition: every other member stores that batch
-            for s in P:
-                assert pl.stores(s, j, t), "stage-2 storage condition"
-            lst.append(Stage2Chunk(job=j, receiver=kp, batch=t,
-                                   classmate_owner=l))
-        out[G] = lst
+    for row in prog.s2_rows:
+        row = int(row)
+        G = prog.group_members(row)
+        out[G] = [
+            Stage2Chunk(job=j, receiver=kp, batch=t,
+                        classmate_owner=int(prog.chunk_aux[row, p]))
+            for p, (kp, j, t) in enumerate(prog.coded_chunks(row))
+        ]
     return out
 
 
 def stage3_chunks(pl: Placement) -> list[Stage3Chunk]:
     """All stage-3 unicasts: for each non-owner U_m of job j, the unique
     class-mate owner U_k sends the aggregate of its stored batches."""
-    d = pl.design
-    out = []
-    for i in range(d.k):
-        cls = d.parallel_class(i)
-        for m in cls:
-            for u in cls:
-                if u == m:
-                    continue
-                for j in d.owned_jobs(u):
-                    # m is in u's class, so m is NOT an owner of j
-                    tu = pl.batch_of_label(j, u)
-                    batches = tuple(t for t in range(d.k) if t != tu)
-                    out.append(Stage3Chunk(job=j, receiver=m, sender=u,
-                                           batches=batches))
+    from .schedule import lower_program
+    prog = lower_program(pl, device_tables=False)
+    out = [
+        Stage3Chunk(job=int(prog.s3_job[i]), receiver=int(prog.s3_recv[i]),
+                    sender=int(prog.s3_send[i]),
+                    batches=tuple(int(t) for t in prog.s3_batches[i]))
+        for i in range(len(prog.s3_job))
+    ]
     # each server misses J - q^{k-2} jobs, one unicast per missing job
-    assert len(out) == d.K * (d.J - d.block_size)
+    assert len(out) == pl.design.K * (pl.design.J - pl.design.block_size)
     return out

@@ -9,7 +9,7 @@ from . import ops, ref
 from .aggregate import aggregate
 from .flash_attention import flash_attention
 from .ssd_scan import ssd_scan
-from .xor_code import xor_encode
+from .xor_code import xor_encode, xor_fold, xor_decode
 
 __all__ = ["ops", "ref", "aggregate", "flash_attention", "ssd_scan",
-           "xor_encode"]
+           "xor_encode", "xor_fold", "xor_decode"]

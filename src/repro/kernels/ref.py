@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-__all__ = ["xor_encode_ref", "aggregate_ref", "flash_attention_ref",
-           "ssd_scan_ref"]
+__all__ = ["xor_encode_ref", "xor_fold_ref", "xor_decode_ref",
+           "aggregate_ref", "flash_attention_ref", "ssd_scan_ref"]
 
 
 def xor_encode_ref(packets: jnp.ndarray) -> jnp.ndarray:
@@ -24,6 +24,20 @@ def xor_encode_ref(packets: jnp.ndarray) -> jnp.ndarray:
     if packets.dtype != jnp.uint32:
         raise TypeError("xor_encode expects uint32 bit patterns")
     return lax.reduce(packets, jnp.uint32(0), lax.bitwise_xor, (0,))
+
+
+def xor_fold_ref(packets: jnp.ndarray) -> jnp.ndarray:
+    """Batched encode oracle: ``u32[R, m, n]`` -> ``u32[R, n]``."""
+    if packets.dtype != jnp.uint32:
+        raise TypeError("xor_fold expects uint32 bit patterns")
+    return lax.reduce(packets, jnp.uint32(0), lax.bitwise_xor, (1,))
+
+
+def xor_decode_ref(recv: jnp.ndarray, packets: jnp.ndarray,
+                   mask: jnp.ndarray) -> jnp.ndarray:
+    """Batched decode oracle: ``recv ^ fold(packets where mask)``."""
+    masked = jnp.where(mask[..., None], packets, jnp.uint32(0))
+    return recv ^ xor_fold_ref(masked)
 
 
 def aggregate_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,

@@ -1,12 +1,21 @@
-"""Pallas TPU kernel: XOR-fold packet encoder for the coded shuffle.
+"""Pallas TPU kernels: XOR packet codec for the coded shuffle.
 
-Algorithm-2 hot loop: a server's coded broadcast Δ is the XOR of the
-``m = k-1`` packets assigned to it (u32 bit patterns of the aggregates).
-At production scale this runs once per (group, round) over multi-MB
-gradient shards, so we fuse the fold into a single VMEM pass instead of
-m-1 separate HLO xors over HBM.
+Algorithm-2 hot loop, both directions:
 
-Tiling: grid over the word dimension; each program XOR-folds an
+* encode — a server's coded broadcast Δ is the XOR of the ``m = k-1``
+  packets assigned to it (u32 bit patterns of the aggregates).
+* decode — a receiver strips a round's broadcast down to its own packet
+  by XOR-ing back the ``m`` cancellation packets it can recompute
+  locally (the Lemma-2 storage condition); a boolean mask selects which
+  ones apply.
+
+At production scale these run once per (stage, round) over multi-MB
+gradient shards, so the fold is fused into a single VMEM pass instead of
+m-1 separate HLO xors over HBM. The batched variants carry one row per
+coded group — the ShuffleProgram executors call them with the whole
+per-round packet table at once.
+
+Tiling: grid over (row, word-block); each program XOR-folds an
 ``(m, BLOCK)`` tile held in VMEM. BLOCK is lane-aligned (multiple of 128).
 """
 
@@ -18,9 +27,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["xor_encode"]
+__all__ = ["xor_encode", "xor_fold", "xor_decode"]
 
 _BLOCK = 1024  # u32 words per tile; multiple of the 128-lane VPU width
+
+
+def _resolve_interpret(interpret) -> bool:
+    """``interpret=None`` -> compiled Mosaic on TPU, interpreter elsewhere
+    (CPU/GPU have no Mosaic lowering for these kernels)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _xor_kernel(p_ref, o_ref, *, m: int):
@@ -32,7 +49,7 @@ def _xor_kernel(p_ref, o_ref, *, m: int):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def xor_encode(packets: jnp.ndarray, *, block: int = _BLOCK,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
     """XOR-fold ``packets: u32[m, n]`` over axis 0 -> ``u32[n]``.
 
     ``n`` is padded to a multiple of ``block`` (XOR identity is 0, so
@@ -40,6 +57,7 @@ def xor_encode(packets: jnp.ndarray, *, block: int = _BLOCK,
     """
     if packets.dtype != jnp.uint32:
         raise TypeError("xor_encode expects uint32")
+    interpret = _resolve_interpret(interpret)
     m, n = packets.shape
     n_pad = -(-n // block) * block
     x = jnp.pad(packets, ((0, 0), (0, n_pad - n)))
@@ -52,3 +70,81 @@ def xor_encode(packets: jnp.ndarray, *, block: int = _BLOCK,
         interpret=interpret,
     )(x)
     return out[:n]
+
+
+def _fold_kernel(p_ref, o_ref, *, m: int):
+    acc = p_ref[0, 0]
+    for i in range(1, m):
+        acc = acc ^ p_ref[0, i]
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_fold(packets: jnp.ndarray, *, block: int = _BLOCK,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Batched encode: ``u32[R, m, n]`` -> ``u32[R, n]`` (fold axis 1).
+
+    Row ``r`` is one coded group's packet set; the grid runs one program
+    per (row, word-block) so every fold is a single VMEM pass.
+    """
+    if packets.dtype != jnp.uint32:
+        raise TypeError("xor_fold expects uint32")
+    interpret = _resolve_interpret(interpret)
+    R, m, n = packets.shape
+    n_pad = -(-n // block) * block
+    x = jnp.pad(packets, ((0, 0), (0, 0), (0, n_pad - n)))
+    out = pl.pallas_call(
+        functools.partial(_fold_kernel, m=m),
+        grid=(R, n_pad // block),
+        in_specs=[pl.BlockSpec((1, m, block), lambda i, j: (i, 0, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, n_pad), jnp.uint32),
+        interpret=interpret,
+    )(x)
+    return out[:, :n]
+
+
+def _decode_kernel(r_ref, p_ref, m_ref, o_ref, *, m: int):
+    acc = r_ref[0]
+    for i in range(m):
+        # m_ref holds 0x00000000 / 0xFFFFFFFF: AND applies the mask
+        acc = acc ^ (p_ref[0, i] & m_ref[0, i])
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_decode(recv: jnp.ndarray, packets: jnp.ndarray,
+               mask: jnp.ndarray, *, block: int = _BLOCK,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Batched decode: ``recv ^ XOR_i(packets[:, i] where mask[:, i])``.
+
+    ``recv: u32[R, n]`` round broadcasts, ``packets: u32[R, m, n]``
+    locally recomputed cancellation packets, ``mask: bool[R, m]``
+    selects the ones that participate. Returns ``u32[R, n]`` — the
+    receiver's own packet per row (Lemma 2 decode).
+    """
+    if recv.dtype != jnp.uint32 or packets.dtype != jnp.uint32:
+        raise TypeError("xor_decode expects uint32")
+    interpret = _resolve_interpret(interpret)
+    R, m, n = packets.shape
+    if recv.shape != (R, n):
+        raise ValueError(f"recv shape {recv.shape} != {(R, n)}")
+    if mask.shape != (R, m):
+        raise ValueError(f"mask shape {mask.shape} != {(R, m)}")
+    n_pad = -(-n // block) * block
+    rv = jnp.pad(recv, ((0, 0), (0, n_pad - n)))
+    pk = jnp.pad(packets, ((0, 0), (0, 0), (0, n_pad - n)))
+    mk = jnp.where(mask, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, m=m),
+        grid=(R, n_pad // block),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m, block), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, n_pad), jnp.uint32),
+        interpret=interpret,
+    )(rv, pk, mk)
+    return out[:, :n]

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
 from repro.core.collective import (CAMRPlan, camr_collective_bytes,
                                    camr_shuffle, make_plan,
                                    uncoded_reduce_scatter)
@@ -41,8 +42,7 @@ from repro.launch.hlo_stats import collective_stats
 def lower_schedules(q: int, k: int, d: int) -> dict:
     plan = make_plan(q, k, d)
     K, J, J_own = plan.K, plan.J, plan.J_own
-    mesh = jax.make_mesh((K,), ("camr",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((K,), ("camr",))
     contribs = jax.ShapeDtypeStruct((K, J_own, k - 1, K, d), jnp.float32)
 
     def _wire(fn):
@@ -53,12 +53,12 @@ def lower_schedules(q: int, k: int, d: int) -> dict:
 
     out = {"q": q, "k": k, "K": K, "J": J, "d": d}
 
-    camr_fn = jax.shard_map(
+    camr_fn = shard_map(
         lambda c: camr_shuffle(plan, c[0], axis_name="camr")[None],
         mesh=mesh, in_specs=P("camr"), out_specs=P("camr"))
     out["camr_wire"], out["camr_ops"] = _wire(camr_fn)
 
-    unc_fn = jax.shard_map(
+    unc_fn = shard_map(
         lambda c: uncoded_reduce_scatter(c[0], axis_name="camr",
                                          plan=plan)[None],
         mesh=mesh, in_specs=P("camr"), out_specs=P("camr"))
@@ -74,8 +74,8 @@ def lower_schedules(q: int, k: int, d: int) -> dict:
         total = jax.lax.psum(dense, "camr")
         return jnp.take(total, me, axis=1)[None]
 
-    ar_fn = jax.shard_map(allreduce_fn, mesh=mesh, in_specs=P("camr"),
-                          out_specs=P("camr"))
+    ar_fn = shard_map(allreduce_fn, mesh=mesh, in_specs=P("camr"),
+                      out_specs=P("camr"))
     out["allreduce_wire"], out["allreduce_ops"] = _wire(ar_fn)
 
     out["analytic"] = camr_collective_bytes(plan)

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "data_axes", "mesh_devices"]
 
 
@@ -19,9 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     reduction (DCN-friendly), never layer-internal collectives."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:

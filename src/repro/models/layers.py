@@ -323,7 +323,8 @@ def moe_block(p, x, cfg):
             me, ce = lax.pmean(me, ax), lax.pmean(ce, ax)
         return out.reshape(b, t, D), E * jnp.sum(me * ce)
 
-    out, aux = jax.shard_map(
+    from repro.compat import shard_map
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(wspec, xs), out_specs=(xs, P()))(
         {k: p[k] for k in ("router", "w_gate", "w_up", "w_down")}, x)

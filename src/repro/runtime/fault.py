@@ -17,8 +17,12 @@ makes single-server loss recoverable WITHOUT recomputation:
 
 :class:`DegradedCAMREngine` executes exactly this protocol and reports
 the load inflation; the straggler path is identical (a straggler is a
-failure with a deadline). Elastic re-planning rebuilds the design for a
-new K and quantifies data movement.
+failure with a deadline). The degraded schedule is not patched at run
+time: :func:`repro.core.schedule.lower_degraded` RE-LOWERS the compiled
+:class:`~repro.core.schedule.ShuffleProgram` against the surviving
+server set, and the engine here interprets the result. Elastic
+re-planning rebuilds the design for a new K and quantifies data
+movement.
 """
 
 from __future__ import annotations
@@ -30,6 +34,7 @@ import numpy as np
 from repro.core.designs import factorize_cluster, make_design
 from repro.core.engine import CAMRConfig, CAMREngine
 from repro.core.placement import make_placement
+from repro.core.schedule import DegradedProgram, lower_degraded
 from repro.core.shuffle import Transmission
 
 __all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport"]
@@ -41,164 +46,73 @@ class DegradedCAMREngine(CAMREngine):
     ``failed`` servers complete the Map phase but are silent in the
     Shuffle (crash or deadline-miss after map). Their reduce functions
     are migrated to the next live server in their parallel class.
+
+    All scheduling decisions live in the re-lowered
+    :class:`~repro.core.schedule.DegradedProgram`; this class only moves
+    the bytes it prescribes.
     """
 
     def __init__(self, cfg: CAMRConfig, map_fn, failed: set[int],
                  **kw):
         super().__init__(cfg, map_fn, **kw)
         self.failed = set(failed)
-        if cfg.k < 3:
-            raise ValueError("degraded recovery requires k >= 3 (k = 2 "
-                             "leaves single-holder batches)")
-        for i in range(cfg.k):
-            cls = set(self.design.parallel_class(i))
-            if len(cls & self.failed) > 1:
-                raise ValueError(
-                    "multiple failures in one parallel class need map "
-                    "recompute (not just shuffle recovery)")
-        # batches are replicated k-1 ways: recovery is possible iff no
-        # batch lost ALL its holders (for k = 3 that means single failure)
-        pl = self.placement
-        for j in range(self.design.J):
-            for t in range(cfg.k):
-                if set(pl.holders(j, t)) <= self.failed:
-                    raise ValueError(
-                        f"batch (job {j}, batch {t}) lost all {cfg.k - 1} "
-                        "replicas — data loss, not recoverable by the "
-                        "shuffle (re-map from the master copy required)")
+        # raises ValueError when the loss exceeds the redundancy
+        self.degraded: DegradedProgram = lower_degraded(
+            self.program, self.failed)
 
     # -- function migration -------------------------------------------- #
     def migrate_target(self, s: int) -> int:
         """Live server taking over s's reduce duties (same class)."""
-        if s not in self.failed:
-            return s
-        cls = self.design.parallel_class(self.design.class_of(s))
-        for cand in cls:
-            if cand not in self.failed:
-                return cand
-        raise RuntimeError("whole parallel class failed")
+        return int(self.degraded.migrate[s])
 
     # -- degraded shuffle ----------------------------------------------- #
-    def _coded_stage(self, stage, groups_chunks, fn_group):
-        """Run Algorithm 2 per group among LIVE members; deliver the rest
-        uncoded from live holders."""
-        from repro.core.shuffle import (coded_multicast_schedule,
-                                        decode_coded_multicast)
+    def _coded_stage(self, stage, fn_group):
+        """Run Algorithm 2 for the fully-live group rows; deliver the
+        degraded rows uncoded, exactly as the re-lowered program says."""
         K = self.cfg.K
-        for G, chunk_specs in groups_chunks.items():
-            live = [s for s in G if s not in self.failed]
-            chunks, arrs = {}, {}
-            for c in chunk_specs:
-                qf = fn_group * K + c.qfunc
-                holders = [s for s in G
-                           if s != c.receiver and s not in self.failed]
-                # the failed server stores every batch the group uses
-                # except its own chunk's -> >= k-2 live holders remain,
-                # and >= 1 because k >= 2 and at most one failure per class
-                assert holders, "unrecoverable: no live holder"
-                val = self.servers[holders[0]].agg[(c.job, c.batch)][qf]
-                arrs[c.receiver] = (c, val)
-                chunks[c.receiver] = self._ser(val)
-            if len(live) == len(G):
-                super_spec = {r: chunks[r] for r in chunks}
-                txs = coded_multicast_schedule(G, super_spec, stage=stage,
-                                               tag=("group", G))
-                for t in txs:
-                    self.trace.add(t)
-                clen = len(next(iter(chunks.values())))
-                for c in chunk_specs:
-                    r = c.receiver
-                    known = {c2.receiver: self._ser(
-                        self.servers[r].agg[(c2.job, c2.batch)][
-                            fn_group * K + c2.qfunc])
-                        for c2 in chunk_specs if c2.receiver != r}
-                    dec = decode_coded_multicast(G, r, txs, known, clen)
-                    qf = fn_group * K + c.qfunc
-                    self.servers[r].recv_batch[(c.job, c.batch, qf)] = \
-                        self._de(dec)
+        prog, deg = self.program, self.degraded
+        for row in deg.coded_rows:
+            if int(prog.stage_of[row]) == stage:
+                self._run_coded_group(int(row), stage, fn_group)
+        for row, sends in deg.uncoded:
+            if int(prog.stage_of[row]) != stage:
                 continue
-            # degraded group: uncoded unicasts from live holders
-            for c in chunk_specs:
-                qf = fn_group * K + c.qfunc
-                rcv = self.migrate_target(c.receiver)
-                if rcv == c.receiver and c.receiver in self.failed:
-                    continue
-                holder = next(s for s in G if s != c.receiver
-                              and s not in self.failed)
-                val = self.servers[holder].agg[(c.job, c.batch)][qf]
+            G = prog.group_members(row)
+            for holder, rcv, job, batch, owner in sends:
+                qf = fn_group * K + owner
+                val = self.servers[holder].agg[(job, batch)][qf]
                 payload = self._ser(val)
                 self.trace.add(Transmission(
                     stage=stage, sender=holder, receivers=(rcv,),
                     payload=payload, tag=("degraded", G)))
-                self.servers[rcv].recv_batch[(c.job, c.batch, qf)] = \
+                self.servers[rcv].recv_batch[(job, batch, qf)] = \
                     self._de(payload)
 
     def _stage3(self, fn_group):
-        from repro.core.shuffle import stage3_chunks
+        """Interpret the re-lowered stage-3 sends (normal unicasts,
+        per-batch recovery from redundant holders, and migration fill).
+        Entries sharing a (receiver, job, function) key are combined
+        locally first, then ASSIGNED — shuffle_phase stays idempotent
+        like the base engine's."""
         K = self.cfg.K
-        for spec in stage3_chunks(self.placement):
-            qf = fn_group * K + spec.receiver
-            rcv = self.migrate_target(spec.receiver)
-            if spec.sender not in self.failed:
-                sender_st = self.servers[spec.sender]
-                acc = None
-                for t in spec.batches:
-                    v = sender_st.agg[(spec.job, t)][qf]
-                    acc = v if acc is None else self.combine(acc, v)
-                payload = self._ser(acc)
-                self.trace.add(Transmission(
-                    stage=3, sender=spec.sender, receivers=(rcv,),
-                    payload=payload, tag=("job", spec.job)))
-                self.servers[rcv].recv_rest[(spec.job, qf)] = \
-                    self._de(payload)
-            else:
-                # recover each batch from a live redundant holder
-                acc = None
-                for t in spec.batches:
-                    holder = next(h for h in self.placement.holders(
-                        spec.job, t) if h not in self.failed)
-                    v = self.servers[holder].agg[(spec.job, t)][qf]
-                    payload = self._ser(v)
-                    self.trace.add(Transmission(
-                        stage=3, sender=holder, receivers=(rcv,),
-                        payload=payload, tag=("degraded-job", spec.job)))
-                    acc = v if acc is None else self.combine(acc, v)
-                self.servers[rcv].recv_rest[(spec.job, qf)] = acc
-        # migration fill: for every failed server f, the takeover also
-        # needs, per job f OWNED, the aggregate of the k-1 batches f held
-        # locally (complement of the degraded-stage-1 delivery).
-        pl, d = self.placement, self.design
-        for f in sorted(self.failed):
-            s = self.migrate_target(f)
-            qf = fn_group * K + f
-            for j in d.owned_jobs(f):
-                tf = pl.batch_of_label(j, f)
-                rest = [t for t in range(d.k) if t != tf]
-                # two live senders cover the complement: a live owner l'
-                # sends its stored complement batches (all but t_{l'}),
-                # another holder sends t_{l'}.
-                l1 = next(u for u in d.owners[j] if u not in self.failed)
-                t1 = pl.batch_of_label(j, l1)
-                acc = None
-                part = [t for t in rest if t != t1]
-                if part:
-                    a1 = None
-                    for t in part:
-                        v = self.servers[l1].agg[(j, t)][qf]
-                        a1 = v if a1 is None else self.combine(a1, v)
-                    self.trace.add(Transmission(
-                        stage=3, sender=l1, receivers=(s,),
-                        payload=self._ser(a1), tag=("migrate", j)))
-                    acc = a1
-                if t1 in rest:
-                    h2 = next(h for h in pl.holders(j, t1)
-                              if h not in self.failed)
-                    v2 = self.servers[h2].agg[(j, t1)][qf]
-                    self.trace.add(Transmission(
-                        stage=3, sender=h2, receivers=(s,),
-                        payload=self._ser(v2), tag=("migrate", j)))
-                    acc = v2 if acc is None else self.combine(acc, v2)
-                self.servers[s].recv_rest[(j, qf)] = acc
+        acc_map: dict = {}
+        for snd, rcv, job, owner, batches in self.degraded.s3:
+            qf = fn_group * K + owner
+            sender_st = self.servers[snd]
+            acc = None
+            for t in batches:
+                v = sender_st.agg[(job, t)][qf]
+                acc = v if acc is None else self.combine(acc, v)
+            payload = self._ser(acc)
+            self.trace.add(Transmission(
+                stage=3, sender=snd, receivers=(rcv,),
+                payload=payload, tag=("job", job, "fn", fn_group)))
+            key = (rcv, job, qf)
+            val = self._de(payload)
+            acc_map[key] = (val if key not in acc_map
+                            else self.combine(acc_map[key], val))
+        for (rcv, job, qf), val in acc_map.items():
+            self.servers[rcv].recv_rest[(job, qf)] = val
 
     def reduce_phase(self):
         """Reduce on live servers; migrated functions use the redirected

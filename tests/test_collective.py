@@ -9,34 +9,98 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core.collective import CAMRPlan, camr_collective_bytes, make_plan
+from repro.core.collective import (CAMRPlan, camr_collective_bytes,
+                                   expected_collective_calls, make_plan)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _RUN = textwrap.dedent("""
     import numpy as np, jax
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.core.collective import (make_plan, camr_shuffle,
-        scatter_contributions, camr_shuffle_reference, uncoded_reduce_scatter)
+        scatter_contributions, camr_shuffle_reference, uncoded_reduce_scatter,
+        expected_collective_calls)
     q, k, d = {q}, {k}, {d}
     plan = make_plan(q, k, d); K = plan.K
     rng = np.random.default_rng(0)
     bg = rng.standard_normal((plan.J, k, K, d)).astype(np.float32)
     contribs = scatter_contributions(plan, bg)
-    mesh = jax.make_mesh((K,), ('camr',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    f = jax.jit(jax.shard_map(
-        lambda c: camr_shuffle(plan, c[0], axis_name='camr')[None],
-        mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
-    out = np.asarray(f(contribs))
+    mesh = make_mesh((K,), ('camr',))
     ref = camr_shuffle_reference(plan, bg)
-    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-6)
-    g = jax.jit(jax.shard_map(
+
+    def count_collectives(jaxpr):
+        n = dict(ppermute=0, all_to_all=0)
+        def walk(jx):
+            for eqn in jx.eqns:
+                if eqn.primitive.name in n:
+                    n[eqn.primitive.name] += 1
+                for v in eqn.params.values():
+                    for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                        if hasattr(sub, 'eqns'):
+                            walk(sub)
+                        elif hasattr(sub, 'jaxpr'):
+                            walk(sub.jaxpr)
+        walk(jaxpr.jaxpr)
+        return n
+
+    for mode, router in [('batched', 'all_to_all'), ('batched', 'ppermute'),
+                         ('looped', 'all_to_all')]:
+        fn = shard_map(
+            lambda c: camr_shuffle(plan, c[0], axis_name='camr', mode=mode,
+                                   router=router)[None],
+            mesh=mesh, in_specs=P('camr'), out_specs=P('camr'))
+        out = np.asarray(jax.jit(fn)(contribs))
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-6)
+        counts = count_collectives(jax.make_jaxpr(fn)(contribs))
+        want = expected_collective_calls(plan, mode, router)
+        got12 = counts['all_to_all'] + counts['ppermute'] - (q - 1)
+        assert got12 == want['stage12'], (mode, router, counts, want)
+        assert counts['ppermute'] + counts['all_to_all'] == want['total']
+
+    g = jax.jit(shard_map(
         lambda c: uncoded_reduce_scatter(c[0], axis_name='camr',
                                          plan=plan)[None],
         mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
     np.testing.assert_allclose(np.asarray(g(contribs)), ref,
                                rtol=2e-5, atol=2e-6)
+    print('OK')
+""")
+
+# seeded regression pinned to the ENGINE oracle: the SPMD collective and
+# the numpy interpreter execute the same ShuffleProgram, so their outputs
+# must agree exactly (both are exact integer-free f32 sums of the same
+# addends in the same order-insensitive reduction tree up to fp assoc).
+_RUN_ENGINE = textwrap.dedent("""
+    import numpy as np, jax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.core.collective import (make_plan, camr_shuffle,
+        scatter_contributions)
+    from repro.core.engine import CAMRConfig, CAMREngine
+    q, k, d = {q}, {k}, {d}
+    plan = make_plan(q, k, d); K = plan.K
+    rng = np.random.default_rng({seed})
+    bg = rng.standard_normal((plan.J, k, K, d)).astype(np.float32)
+
+    # engine run: gamma=1, Q=K; map_fn(job, subfile t) = bg[job, t]
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    eng = CAMREngine(cfg, lambda job, sf: sf)
+    datasets = [[bg[j, t] for t in range(k)] for j in range(plan.J)]
+    results = eng.run(datasets)
+    eng.verify(datasets, results)
+
+    contribs = scatter_contributions(plan, bg)
+    mesh = make_mesh((K,), ('camr',))
+    f = jax.jit(shard_map(
+        lambda c: camr_shuffle(plan, c[0], axis_name='camr')[None],
+        mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+    out = np.asarray(f(contribs))
+    for s in range(K):
+        for j in range(plan.J):
+            np.testing.assert_allclose(
+                out[s, j], results[s][(j, s)], rtol=2e-5, atol=2e-6,
+                err_msg=f'device {{s}} job {{j}}')
     print('OK')
 """)
 
@@ -57,6 +121,29 @@ def _run_subprocess(code: str, ndev: int) -> str:
 def test_camr_shuffle_multidevice(q, k, d):
     out = _run_subprocess(_RUN.format(q=q, k=k, d=d), ndev=q * k)
     assert "OK" in out
+
+
+@pytest.mark.parametrize("q,k,d,seed", [(2, 3, 8, 7), (4, 3, 16, 11)])
+def test_camr_shuffle_matches_engine_oracle(q, k, d, seed):
+    """The SPMD executor and the numpy engine interpret the SAME
+    ShuffleProgram: per-device outputs must match the engine's reduce
+    results (seeded regression for the decode path)."""
+    out = _run_subprocess(_RUN_ENGINE.format(q=q, k=k, d=d, seed=seed),
+                          ndev=q * k)
+    assert "OK" in out
+
+
+def test_expected_collective_calls_model():
+    plan = make_plan(4, 3, 16)
+    want = expected_collective_calls(plan, "batched", "all_to_all")
+    # the headline number: 2*(k-1) batched collectives for stages 1+2,
+    # independent of J (the looped path needs (J + n_s2)*(k-1) = 128)
+    assert want["stage12"] == 2 * (plan.k - 1) == 4
+    looped = expected_collective_calls(plan, "looped")
+    assert looped["stage12"] == (plan.J + plan.program.n_s2) * (plan.k - 1)
+    assert looped["stage12"] == 128
+    pp = expected_collective_calls(plan, "batched", "ppermute")
+    assert pp["stage12"] == 2 * (plan.k - 1) * plan.q
 
 
 def test_plan_validation():

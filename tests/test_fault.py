@@ -52,6 +52,23 @@ def test_degraded_engine_recovers(q, k, failed):
     assert checked == cfg.J * cfg.num_functions()
 
 
+def test_degraded_shuffle_is_idempotent():
+    """Re-running shuffle_phase on the same engine must not change the
+    reduce results (the split stage-3 sends are combined locally, then
+    assigned — like the base engine's overwrite semantics)."""
+    cfg = CAMRConfig(q=2, k=3, gamma=1)
+    ds = _datasets(cfg, dim=4)
+    eng = DegradedCAMREngine(cfg, _linear_map(cfg.num_functions()),
+                             failed={0})
+    r1 = eng.run(ds)
+    eng.shuffle_phase()
+    r2 = eng.reduce_phase()
+    for s in range(cfg.K):
+        assert r1[s].keys() == r2[s].keys()
+        for key, v in r1[s].items():
+            np.testing.assert_array_equal(v, r2[s][key])
+
+
 def test_degraded_load_inflation_is_bounded():
     """Degraded-mode load exceeds the healthy load, but stays below the
     fully-uncoded baseline (the redundancy absorbs the failure)."""

@@ -10,7 +10,7 @@ from repro.kernels import ref
 from repro.kernels.aggregate import aggregate
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels.xor_code import xor_encode
+from repro.kernels.xor_code import xor_decode, xor_encode, xor_fold
 
 
 # --------------------------------------------------------------------- #
@@ -31,6 +31,42 @@ def test_xor_encode_involution():
     a = rng.integers(0, 2**32, size=(2, 300), dtype=np.uint32)
     enc = np.asarray(xor_encode(jnp.asarray(a)))
     np.testing.assert_array_equal(enc ^ a[0], a[1])
+
+
+@pytest.mark.parametrize("R,m,n", [(1, 2, 64), (5, 3, 100), (16, 4, 1025),
+                                   (3, 2, 1)])
+def test_xor_fold_matches_ref(R, m, n):
+    rng = np.random.default_rng(R * 100 + m * 10 + n)
+    pk = rng.integers(0, 2**32, size=(R, m, n), dtype=np.uint32)
+    got = xor_fold(jnp.asarray(pk), block=256)
+    want = ref.xor_fold_ref(jnp.asarray(pk))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("R,m,n", [(1, 2, 64), (6, 4, 300), (4, 3, 1025)])
+def test_xor_decode_matches_ref(R, m, n):
+    rng = np.random.default_rng(R + m + n)
+    pk = rng.integers(0, 2**32, size=(R, m, n), dtype=np.uint32)
+    rv = rng.integers(0, 2**32, size=(R, n), dtype=np.uint32)
+    mk = rng.integers(0, 2, size=(R, m)).astype(bool)
+    got = xor_decode(jnp.asarray(rv), jnp.asarray(pk), jnp.asarray(mk),
+                     block=256)
+    want = ref.xor_decode_ref(jnp.asarray(rv), jnp.asarray(pk),
+                              jnp.asarray(mk))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xor_codec_roundtrip():
+    """decode(encode) recovers the receiver's packet: Δ = XOR of m
+    packets; cancelling m-1 of them leaves the remaining one."""
+    rng = np.random.default_rng(42)
+    R, m, n = 4, 3, 200
+    pk = rng.integers(0, 2**32, size=(R, m, n), dtype=np.uint32)
+    delta = xor_fold(jnp.asarray(pk), block=256)        # all m packets
+    mask = np.ones((R, m), dtype=bool)
+    mask[:, 0] = False                                   # cancel all but 0
+    got = xor_decode(delta, jnp.asarray(pk), jnp.asarray(mask), block=256)
+    np.testing.assert_array_equal(np.asarray(got), pk[:, 0])
 
 
 # --------------------------------------------------------------------- #

@@ -12,11 +12,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _RUN = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
     from repro.configs import get_config, reduced
     from repro.models import lm
     from repro.launch import partitioning as pt
-    mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((4, 2), ('data', 'model'))
     cfg = reduced(get_config('{arch}'))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)

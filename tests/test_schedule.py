@@ -1,0 +1,148 @@
+"""ShuffleProgram IR — lowering invariants shared by all three executors."""
+
+import numpy as np
+import pytest
+
+from repro.core.designs import make_design
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.collective import make_plan
+from repro.core.placement import make_placement
+from repro.core.schedule import lower_degraded, lower_program
+
+CONFIGS = [(2, 3), (3, 3), (4, 3), (2, 4), (3, 4)]
+
+
+def _program(q, k, d=None, **kw):
+    pl = make_placement(make_design(q, k), gamma=1)
+    return lower_program(pl, d=d, **kw)
+
+
+@pytest.mark.parametrize("q,k", CONFIGS)
+def test_group_table_partition(q, k):
+    """The q^k value vectors split into J stage-1 groups (= owner sets)
+    and J(q-1) stage-2 groups; every group has one member per class."""
+    prog = _program(q, k)
+    d = prog.design
+    assert prog.n_groups == q ** k
+    assert len(prog.s1_rows) == d.J
+    assert len(prog.s2_rows) == d.J * (q - 1)
+    for row in range(prog.n_groups):
+        G = prog.group_members(row)
+        assert [d.class_of(s) for s in G] == list(range(k))
+        assert list(G) == sorted(G)
+    # stage-1 rows are in job order: group of row s1_rows[j] = owners[j]
+    for j in range(d.J):
+        assert prog.group_members(int(prog.s1_rows[j])) == d.owners[j]
+    # stage-2 rows enumerate stage2_groups() in the same (rank) order
+    for row, G in zip(prog.s2_rows, d.stage2_groups()):
+        assert prog.group_members(int(row)) == G
+
+
+@pytest.mark.parametrize("q,k", CONFIGS)
+def test_chunk_storage_conditions(q, k):
+    """Each chunk is missed by its receiver and stored by every other
+    group member (the Lemma-2 condition both coded stages rely on)."""
+    prog = _program(q, k)
+    pl = prog.placement
+    for row in range(prog.n_groups):
+        G = prog.group_members(row)
+        for kp, job, batch in prog.coded_chunks(row):
+            assert not pl.stores(kp, job, batch)
+            for s in G:
+                if s != kp:
+                    assert pl.stores(s, job, batch)
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (4, 3), (3, 4)])
+def test_routing_tables_roundtrip(q, k):
+    """Sender and receiver agree on every routing slot, for both the
+    all_to_all and the ppermute router, in every round of both stages."""
+    prog = _program(q, k, d=2 * (k - 1))
+    for stage in (1, 2):
+        T = prog.stage_tables(stage)
+        R = int(T.R)
+        for r in range(1, k):
+            for li, row in enumerate(T.rows):
+                G = prog.group_members(int(row))
+                for iu, u in enumerate(G):
+                    w = G[(iu + r) % k]
+                    # a2a: receiver w finds sender u's block at u*R + idx
+                    slot = int(T.a2a_recv[r - 1, w, li])
+                    assert slot // R == u
+                    assert int(T.a2a_send[r - 1, u, w, slot % R]) == li
+                    # ppermute: same block under the (r, delta) sub-round
+                    delta = ((w % q) - (u % q)) % q
+                    pslot = int(T.pp_recv[r - 1, w, li])
+                    assert pslot // R == delta
+                    assert int(T.pp_send[r - 1, delta, u, pslot % R]) == li
+                    # and the sub-round permutation routes u -> w
+                    perm = dict(T.pp_perms[r - 1][delta])
+                    assert perm[u] == w
+        # sub-round perms are full device permutations
+        for r in range(1, k):
+            for delta in range(q):
+                perm = T.pp_perms[r - 1][delta]
+                assert sorted(p[0] for p in perm) == list(range(prog.K))
+                assert sorted(p[1] for p in perm) == list(range(prog.K))
+
+
+@pytest.mark.parametrize("q,k", [(2, 3), (4, 3)])
+def test_engine_and_plan_share_tables(q, k):
+    """Acceptance: CAMREngine and camr_shuffle consume the SAME compiled
+    schedule — identical group/chunk/stage-3 tables."""
+    eng = CAMREngine(CAMRConfig(q=q, k=k, gamma=1),
+                     lambda job, sf: np.zeros((q * k, 1)))
+    plan = make_plan(q, k, d=2 * (k - 1))
+    a, b = eng.program, plan.program
+    for name in ("groups", "stage_of", "chunk_job", "chunk_batch",
+                 "s1_rows", "s2_rows", "owned_jobs", "stored_batches",
+                 "s3_job", "s3_recv", "s3_send", "s3_batches",
+                 "is_own", "own_slot", "s2_ord", "s3_off"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name),
+                                      err_msg=name)
+
+
+def test_lowering_is_cached():
+    pl = make_placement(make_design(2, 3), gamma=1)
+    assert lower_program(pl, Q=6) is lower_program(pl, Q=6)
+
+
+@pytest.mark.parametrize("q,k,failed", [(2, 3, {0}), (3, 3, {4}),
+                                        (2, 4, {0, 7})])
+def test_degraded_lowering_structure(q, k, failed):
+    prog = _program(q, k)
+    deg = lower_degraded(prog, failed)
+    d = prog.design
+    # migration stays inside the parallel class, on a live server
+    for s in range(prog.K):
+        tgt = int(deg.migrate[s])
+        assert tgt not in failed
+        if s not in failed:
+            assert tgt == s
+        else:
+            assert d.class_of(tgt) == d.class_of(s)
+    # coded + uncoded rows partition the group table; a row is degraded
+    # iff it contains a failed member, and its senders are live
+    uncoded_rows = {row for row, _ in deg.uncoded}
+    assert uncoded_rows | set(deg.coded_rows) == set(range(prog.n_groups))
+    assert not (uncoded_rows & set(deg.coded_rows))
+    for row, sends in deg.uncoded:
+        assert set(prog.group_members(row)) & failed
+        for holder, rcv, job, batch, owner in sends:
+            assert holder not in failed
+            assert rcv not in failed
+            assert prog.placement.stores(holder, job, batch)
+    for row in deg.coded_rows:
+        assert not (set(prog.group_members(row)) & failed)
+    # stage-3 senders and receivers are live
+    for snd, rcv, job, owner, batches in deg.s3:
+        assert snd not in failed
+        assert rcv not in failed
+
+
+def test_degraded_lowering_rejects_unrecoverable():
+    prog = _program(2, 3)
+    with pytest.raises(ValueError):
+        lower_degraded(prog, {0, 1})   # same parallel class
+    with pytest.raises(ValueError):
+        lower_degraded(prog, {0, 4})   # a batch loses both replicas
