@@ -1,8 +1,9 @@
 """Fault-tolerance overhead: degraded-mode shuffle load vs healthy.
 
-Not a paper table — it quantifies the recovery protocol DESIGN.md §3
+Not a paper table — it quantifies the recovery protocol DESIGN.md §7
 builds on the paper's placement redundancy (one shuffle-only recovery per
-single failure; the paper's load is the healthy row)."""
+single failure; the paper's load is the healthy row), under the §3
+bus/p2p accounting."""
 
 import time
 

@@ -1,0 +1,138 @@
+"""JobStream pipelined multi-wave throughput vs the serial engine loop.
+
+Acceptance numbers for the JobStream runtime (DESIGN.md §9): stream W
+same-shaped (and one mixed-shape) waves of CAMR jobs through the
+cluster and compare against the serial baseline
+(:meth:`CAMREngine.run_stream` — one engine pass per wave). The
+pipelined runtime batches same-shaped waves into a single
+ShuffleProgram execution, pulls every lowering from the structural
+schedule cache, and overlaps the map lane of batch t+1 with the
+shuffle+reduce lane of batch t. Outputs are verified BIT-identical to
+the serial oracle before any time is reported.
+
+    PYTHONPATH=src python -m benchmarks.bench_jobstream [--smoke]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.runtime.jobstream import JobSpec, JobStream
+
+# (q, k, waves) — J = q**(k-1) jobs per wave
+CONFIGS = [(2, 3, 8), (3, 3, 8), (2, 4, 6), (4, 3, 4)]
+SMOKE_CONFIGS = [(2, 3, 3)]
+D = 8          # value width per wave
+
+
+def _identity_map(job, sf):
+    return sf
+
+
+def make_specs(q: int, k: int, waves: int, seed: int = 0,
+               d: int = D) -> list:
+    """Waves of pre-mapped intermediate values (map = identity), so the
+    benchmark times the runtime, not a synthetic map function."""
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    Q = cfg.num_functions()
+    rng = np.random.default_rng(seed)
+    specs = []
+    for w in range(waves):
+        ds = [[rng.standard_normal((Q, d)).astype(np.float32)
+               for _ in range(cfg.N)] for _ in range(cfg.J)]
+        specs.append(JobSpec(cfg, _identity_map, ds, name=f"wave{w}"))
+    return specs
+
+
+def bench_config(specs: list, name: str) -> dict:
+    # warm the schedule cache AND the numpy/testing import paths first,
+    # so the serial loop is NOT penalized for lowering or first-run
+    # costs — the reported speedup is batching + pipelining only
+    for sp in specs:
+        CAMREngine(sp.cfg, sp.map_fn)
+    CAMREngine(specs[0].cfg, specs[0].map_fn,
+               combine=specs[0].combine).run(specs[0].datasets)
+
+    t0 = time.perf_counter()
+    serial = [CAMREngine(sp.cfg, sp.map_fn, combine=sp.combine).run(
+        sp.datasets) for sp in specs]
+    t_serial = time.perf_counter() - t0
+
+    stream = JobStream()
+    t0 = time.perf_counter()
+    got = stream.run(specs)
+    t_stream = time.perf_counter() - t0
+
+    # bit-identity: stream outputs == the serial oracle results
+    for want, res in zip(serial, got):
+        for a, b in zip(want, res):
+            assert a.keys() == b.keys()
+            for key in a:
+                assert np.array_equal(a[key], b[key]), key
+
+    rep = stream.last_report
+    return dict(
+        name=name, waves=len(specs), batches=rep.batches,
+        serial_s=t_serial, stream_s=t_stream,
+        speedup=t_serial / t_stream,
+        serial_wps=len(specs) / t_serial,
+        stream_wps=len(specs) / t_stream,
+        cache_misses=rep.cache_misses,
+    )
+
+
+def _all_configs(smoke: bool) -> list:
+    out = []
+    for q, k, w in (SMOKE_CONFIGS if smoke else CONFIGS):
+        out.append((f"jobstream_q{q}_k{k}_w{w}", make_specs(q, k, w)))
+    if not smoke:
+        # heterogeneous stream: two shapes interleaved — exercises the
+        # map/shuffle overlap across batches, not just wave batching
+        mixed = make_specs(2, 3, 4, seed=1) + make_specs(2, 4, 4, seed=2)
+        mixed = [mixed[i] for i in (0, 4, 1, 5, 2, 6, 3, 7)]
+        out.append(("jobstream_mixed_q2k3+q2k4_w8", mixed))
+    return out
+
+
+def rows(smoke: bool = False):
+    """Suite entry point for benchmarks/run.py."""
+    out = []
+    for name, specs in _all_configs(smoke):
+        r = bench_config(specs, name)
+        out.append({
+            "name": r["name"],
+            "us_per_call": r["stream_s"] / r["waves"] * 1e6,
+            "derived": (f"waves={r['waves']} batches={r['batches']} "
+                        f"serial={r['serial_s'] * 1e3:.1f}ms "
+                        f"stream={r['stream_s'] * 1e3:.1f}ms "
+                        f"speedup={r['speedup']:.2f}x "
+                        f"stream={r['stream_wps']:.1f}waves/s "
+                        f"lowerings={r['cache_misses']}"),
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config (CI smoke for the README "
+                         "commands)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    beat = 0
+    for row in rows(smoke=args.smoke):
+        print(f"{row['name']},{row['us_per_call']:.1f},"
+              f"\"{row['derived']}\"", flush=True)
+        if "speedup=" in row["derived"]:
+            beat += float(
+                row["derived"].split("speedup=")[1].split("x")[0]) > 1.0
+    if not args.smoke and beat < 3:
+        raise SystemExit(
+            f"pipelined stream beat the serial loop on only {beat} "
+            "configs (acceptance needs >= 3)")
+
+
+if __name__ == "__main__":
+    main()

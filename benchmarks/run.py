@@ -7,9 +7,11 @@ Tables:
   loads      — §IV stage loads + §V CAMR==CCDC comparison (measured)
   jobs       — Table III job minima (K=100)
   encoding   — §I-A encoding-complexity claim
-  fault      — degraded-mode load inflation (DESIGN.md §3)
+  fault      — degraded-mode load inflation (DESIGN.md §7)
   e2e        — multi-model training integration (paper's DL use case)
   collective — TPU p2p byte model, CAMR vs ring psum
+  schedule   — ShuffleProgram lowering + batched-vs-looped shuffle time
+  jobstream  — pipelined multi-wave stream vs serial engine loop (§9)
   roofline   — §Roofline summary from the dry-run artifacts (if present)
 """
 
@@ -52,6 +54,8 @@ SUITES = {
                                      fromlist=["rows"]).rows(),
     "schedule": lambda: __import__("benchmarks.bench_schedule",
                                    fromlist=["rows"]).rows(),
+    "jobstream": lambda: __import__("benchmarks.bench_jobstream",
+                                    fromlist=["rows"]).rows(),
     "roofline": _roofline_rows,
 }
 

@@ -38,6 +38,10 @@ of stages 1 and 2 as ONE grouped collective over every group at once —
 (k-1)`` tiny ppermutes — kept as the benchmark baseline
 (benchmarks/bench_schedule.py).
 
+Multi-wave streaming (DESIGN.md §9) is :class:`ShuffleStream`: async,
+double-buffered dispatch of this executor with same-shaped waves
+stacked along ``d`` into a single program execution.
+
 XOR encode/decode run through the Pallas kernels in
 :mod:`repro.kernels.xor_code` when ``use_kernels`` is true (default: on
 TPU backends); the pure-jnp fold is used otherwise.
@@ -45,6 +49,7 @@ TPU backends); the pure-jnp fold is used otherwise.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -53,13 +58,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .designs import ResolvableDesign, make_design
-from .placement import Placement, make_placement
-from .schedule import ShuffleProgram, StageTables, lower_program
+from .designs import ResolvableDesign
+from .placement import Placement
+from .schedule import SCHEDULE_CACHE, ShuffleProgram, StageTables
 
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
-           "camr_collective_bytes", "expected_collective_calls"]
+           "camr_collective_bytes", "expected_collective_calls",
+           "ShuffleStream"]
 
 
 # --------------------------------------------------------------------- #
@@ -116,16 +122,18 @@ class CAMRPlan:
 
 
 def make_plan(q: int, k: int, d: int) -> CAMRPlan:
-    """Lower the full SPMD schedule for a (q, k) CAMR cluster."""
+    """Lower the full SPMD schedule for a (q, k) CAMR cluster.
+
+    Served from the structural :data:`~repro.core.schedule.SCHEDULE_CACHE`
+    — all shard widths of one (q, k) share the same base lowering.
+    """
     if k < 3:
         # k = 2 degenerates (single-packet chunks, blocks of size 1);
         # supported by the engine but not worth a coded TPU path.
         raise ValueError("TPU collective path requires k >= 3")
     if d % (k - 1):
         raise ValueError(f"shard width d={d} must be divisible by k-1={k - 1}")
-    design = make_design(q, k)
-    pl = make_placement(design, gamma=1)
-    program = lower_program(pl, Q=design.K, d=d)
+    program = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d)
     return CAMRPlan(q=q, k=k, d=d, program=program)
 
 
@@ -397,6 +405,137 @@ def uncoded_reduce_scatter(contribs: jnp.ndarray, *, axis_name: str,
     dense = dense.at[jl].add(masked.sum(axis=1))
     total = lax.psum(dense, axis_name)            # [J, K, d]
     return jnp.take(total, me, axis=1)
+
+
+# --------------------------------------------------------------------- #
+# async / double-buffered multi-wave execution (DESIGN.md §9)
+# --------------------------------------------------------------------- #
+class ShuffleStream:
+    """Async, double-buffered multi-wave driver of :func:`camr_shuffle`.
+
+    The SPMD half of the JobStream runtime
+    (:class:`repro.runtime.jobstream.JobStream` is the host-side,
+    bit-exact reference). Two mechanisms, both byte-preserving:
+
+    * **wave batching** — ``wave_batch`` same-shaped waves are stacked
+      along the value axis ``d`` and run as ONE shuffle of width
+      ``W*d``. Every step of the codec (packet split, XOR fold,
+      cancellation, reassembly) is elementwise per value column, so
+      stacking commutes with the whole pipeline and the split outputs
+      are exactly the per-wave outputs.
+    * **async dispatch with double buffering** — :meth:`submit` issues
+      the jitted shard_map computation WITHOUT blocking (jax async
+      dispatch); at most ``depth`` dispatched waves keep device buffers
+      alive (default 2 = classic double buffering, memory cost model in
+      DESIGN.md §9). The oldest in-flight wave is materialized only
+      when the window is full, so host-side map/aggregate work for
+      wave ``t+1`` overlaps the on-device shuffle of wave ``t``.
+
+    Usage::
+
+        stream = ShuffleStream(q, k, d, mesh=mesh, wave_batch=2)
+        outs = stream.run_waves(contribs_list)   # [W][K, J, d]
+    """
+
+    def __init__(self, q: int, k: int, d: int, *, mesh,
+                 axis_name: str = "camr", depth: int = 2,
+                 wave_batch: int = 1, mode: str = "batched",
+                 router: str = "all_to_all", use_kernels=None):
+        if k < 3:
+            raise ValueError("TPU collective path requires k >= 3")
+        if d % (k - 1):
+            # validated here, not at dispatch: every stacked width W*d
+            # inherits divisibility from d, so a stream can never fail
+            # mid-flight on a partial trailing batch
+            raise ValueError(f"shard width d={d} must be divisible by "
+                             f"k-1={k - 1}")
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        if wave_batch < 1:
+            raise ValueError("wave_batch must be >= 1")
+        self.q, self.k, self.d = q, k, d
+        self.K = q * k
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.depth = depth
+        self.wave_batch = wave_batch
+        self.mode = mode
+        self.router = router
+        self.use_kernels = use_kernels
+        self._jitted: dict[int, object] = {}   # W -> compiled executor
+        self._pending: list = []               # waves awaiting dispatch
+        self._in_flight: deque = deque()       # (device out, W)
+        self._done: list = []                  # host [K, J, d] outputs
+
+    # -- compiled executor per stack width ------------------------------ #
+    def _fn(self, W: int):
+        if W not in self._jitted:
+            from jax.sharding import PartitionSpec as P
+
+            from repro.compat import shard_map
+            prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                          d=W * self.d)
+            plan = CAMRPlan(q=self.q, k=self.k, d=W * self.d,
+                            program=prog)
+
+            def body(c):
+                return camr_shuffle(plan, c[0], axis_name=self.axis_name,
+                                    mode=self.mode, router=self.router,
+                                    use_kernels=self.use_kernels)[None]
+
+            self._jitted[W] = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=P(self.axis_name),
+                out_specs=P(self.axis_name)))
+        return self._jitted[W]
+
+    # -- streaming ------------------------------------------------------ #
+    def submit(self, contribs) -> None:
+        """Queue one wave ``[K, J_own, k-1, K, d]``; dispatches as soon
+        as ``wave_batch`` waves are pending. Never blocks on compute
+        unless the double buffer is full."""
+        shape = (self.K, self.q ** (self.k - 2), self.k - 1, self.K,
+                 self.d)
+        if tuple(np.shape(contribs)) != shape:
+            raise ValueError(f"wave shape {np.shape(contribs)} != {shape}")
+        self._pending.append(contribs)
+        if len(self._pending) >= self.wave_batch:
+            self._dispatch()
+
+    def _dispatch(self) -> None:
+        waves, self._pending = self._pending, []
+        if not waves:
+            return
+        buf = (waves[0] if len(waves) == 1
+               else np.concatenate([np.asarray(w) for w in waves],
+                                   axis=-1))
+        out = self._fn(len(waves))(buf)        # async: returns immediately
+        self._in_flight.append((out, len(waves)))
+        while len(self._in_flight) > self.depth:
+            self._collect_oldest()
+
+    def _collect_oldest(self) -> None:
+        out, W = self._in_flight.popleft()
+        arr = np.asarray(jax.block_until_ready(out))   # [K, J, W*d]
+        if W == 1:
+            self._done.append(arr)
+        else:
+            self._done.extend(
+                arr[..., w * self.d:(w + 1) * self.d] for w in range(W))
+
+    def drain(self) -> list[np.ndarray]:
+        """Flush pending waves, block on everything in flight, and
+        return all completed ``[K, J, d]`` outputs in submission order."""
+        self._dispatch()
+        while self._in_flight:
+            self._collect_oldest()
+        done, self._done = self._done, []
+        return done
+
+    def run_waves(self, waves) -> list[np.ndarray]:
+        """Convenience: submit every wave, then drain."""
+        for w in waves:
+            self.submit(w)
+        return self.drain()
 
 
 def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4

@@ -17,9 +17,9 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .designs import ResolvableDesign, make_design
-from .placement import Placement, make_placement
-from .schedule import ShuffleProgram, lower_program
+from .designs import ResolvableDesign
+from .placement import Placement
+from .schedule import SCHEDULE_CACHE, ShuffleProgram
 from .shuffle import (
     ShuffleTrace,
     Transmission,
@@ -92,13 +92,15 @@ class CAMREngine:
     def __init__(self, cfg: CAMRConfig, map_fn, combine: Combine = np.add,
                  label_perm=None):
         self.cfg = cfg
-        self.design: ResolvableDesign = make_design(cfg.q, cfg.k)
-        self.placement: Placement = make_placement(
-            self.design, cfg.gamma, label_perm=label_perm)
         # the engine is a numpy interpreter of the compiled schedule —
-        # the SAME tables the SPMD collective executes (schedule.py)
-        self.program: ShuffleProgram = lower_program(
-            self.placement, Q=cfg.num_functions(), device_tables=False)
+        # the SAME tables the SPMD collective executes (schedule.py);
+        # the structural SCHEDULE_CACHE shares one lowering (and one
+        # design/placement) across every engine of a configuration.
+        self.program: ShuffleProgram = SCHEDULE_CACHE.program(
+            cfg.q, cfg.k, gamma=cfg.gamma, Q=cfg.num_functions(),
+            label_perm=label_perm, device_tables=False)
+        self.design: ResolvableDesign = self.program.design
+        self.placement: Placement = self.program.placement
         self.map_fn = map_fn
         self.combine = combine
         self.trace = ShuffleTrace()
@@ -132,6 +134,25 @@ class CAMREngine:
         self.map_phase(datasets)
         self.shuffle_phase()
         return self.reduce_phase()
+
+    def reset(self) -> None:
+        """Clear all per-run state (aggregates, decoded values, trace)."""
+        self.trace = ShuffleTrace()
+        self.servers = [_ServerState() for _ in range(self.cfg.K)]
+        self._value_dim = None
+        self._dtype = None
+
+    def run_stream(self, waves) -> list:
+        """Serial multi-wave loop: :meth:`run` on each element of
+        ``waves`` (a sequence of per-wave ``datasets``) with fresh state
+        in between. This is the correctness oracle the pipelined
+        :class:`repro.runtime.jobstream.JobStream` must match
+        bit-for-bit (DESIGN.md §9)."""
+        out = []
+        for datasets in waves:
+            self.reset()
+            out.append(self.run(datasets))
+        return out
 
     def map_phase(self, datasets) -> None:
         pl, d = self.placement, self.design

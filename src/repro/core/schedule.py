@@ -51,13 +51,15 @@ rank so sender and receiver agree on row order.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
 from functools import lru_cache
 
 import numpy as np
 
-from .designs import ResolvableDesign
-from .placement import Placement
+from .designs import ResolvableDesign, make_design
+from .placement import Placement, make_placement
 
 __all__ = [
     "StageTables",
@@ -65,6 +67,8 @@ __all__ = [
     "lower_program",
     "DegradedProgram",
     "lower_degraded",
+    "ScheduleCache",
+    "SCHEDULE_CACHE",
 ]
 
 
@@ -591,3 +595,146 @@ def lower_degraded(program: ShuffleProgram,
         base=program, failed=failed, migrate=migrate,
         coded_rows=tuple(coded_rows), uncoded=tuple(uncoded),
         s3=tuple(s3))
+
+
+# --------------------------------------------------------------------- #
+# structural schedule cache (DESIGN.md §9)
+# --------------------------------------------------------------------- #
+def _normalize_label_perm(label_perm, k):
+    """Hashable canonical form; the identity labeling collapses to None."""
+    if label_perm is None:
+        return None
+    label_perm = tuple(tuple(int(x) for x in p) for p in label_perm)
+    ident = tuple(range(k))
+    if all(p == ident for p in label_perm):
+        return None
+    return label_perm
+
+
+def _program_key(program: ShuffleProgram) -> tuple:
+    """Structural identity of a lowered program — same tuple, same
+    tables. ``d`` is deliberately absent: no table depends on it, so
+    width variants of one configuration share degraded re-lowerings."""
+    return (program.q, program.k, program.placement.gamma,
+            _normalize_label_perm(program.placement.label_perm, program.k),
+            program.Q, program.s1 is not None)
+
+
+class ScheduleCache:
+    """Process-wide cache of lowered schedules, keyed by VALUE.
+
+    :func:`lower_program` is memoized on Placement *identity* (frozen,
+    ``eq=False``), which is the right policy for a long-lived placement
+    object but useless to a runtime that builds one engine per wave of
+    jobs: every wave re-derives the same design/placement and pays the
+    full lowering again. This cache keys structurally instead
+    (DESIGN.md §9):
+
+    * programs by ``(q, k, gamma, label_perm, Q, device_tables)`` — the
+      survivor set of a healthy cluster is implicit;
+    * degraded programs additionally by ``frozenset(failed)``, i.e. one
+      entry per *survivor set*, so fault re-lowering is paid once per
+      (configuration, failure pattern) instead of once per wave.
+
+    ``d`` (the SPMD shard width) does NOT change any table — only the
+    runtime packet split — so all widths of one configuration share the
+    same base lowering; a width-stamped view is a cheap
+    ``dataclasses.replace``. A changed survivor set is a different key
+    (never a mutation), and :meth:`clear` drops everything — those are
+    the only two invalidation events; entries otherwise stay valid
+    forever because every input of the lowering is in the key.
+
+    Both maps are LRU-bounded (``maxsize`` each) so replanning loops
+    cannot pin unbounded table memory. Lookups are serialized by a
+    lock: the JobStream runtime constructs engines (and therefore
+    queries this cache) from its map prefetch thread.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._programs: OrderedDict = OrderedDict()
+        self._degraded: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    # -- bookkeeping ---------------------------------------------------- #
+    def _get(self, table: OrderedDict, key):
+        got = table.get(key)
+        if got is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+            table.move_to_end(key)
+        return got
+
+    def _put(self, table: OrderedDict, key, value):
+        table[key] = value
+        while len(table) > self.maxsize:
+            table.popitem(last=False)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(hits=self.hits, misses=self.misses,
+                        programs=len(self._programs),
+                        degraded=len(self._degraded))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._programs.clear()
+            self._degraded.clear()
+            self.hits = 0
+            self.misses = 0
+
+    # -- lookups -------------------------------------------------------- #
+    def program(self, q: int, k: int, *, gamma: int = 1,
+                Q: int | None = None, d: int | None = None,
+                label_perm=None, device_tables: bool = True
+                ) -> ShuffleProgram:
+        """The lowered program of one configuration (lowering on miss)."""
+        label_perm = _normalize_label_perm(label_perm, k)
+        Q = q * k if Q is None else Q   # lower_program's own default
+        if d is not None and d % (k - 1):
+            raise ValueError(f"shard width d={d} must be divisible by "
+                             f"k-1={k - 1}")
+        base_key = (q, k, gamma, label_perm, Q, device_tables, None)
+        with self._lock:
+            base = self._get(self._programs, base_key)
+            if base is None:
+                pl = make_placement(make_design(q, k), gamma,
+                                    label_perm=label_perm)
+                # bypass lower_program's identity-keyed lru_cache: the
+                # placement is fresh (guaranteed miss there), and going
+                # through it would pin every lowering a second time,
+                # surviving this cache's eviction/clear()
+                base = lower_program.__wrapped__(
+                    pl, Q=Q, d=None, device_tables=device_tables)
+                self._put(self._programs, base_key, base)
+            if d is None:
+                return base
+            key = base_key[:-1] + (d,)
+            prog = self._get(self._programs, key)
+            if prog is None:
+                prog = replace(base, d=d)  # tables shared with the base
+                self._put(self._programs, key, prog)
+            return prog
+
+    def degraded(self, program: ShuffleProgram,
+                 failed) -> DegradedProgram:
+        """The re-lowered schedule for ``program`` minus ``failed``.
+
+        Unrecoverable patterns raise (and are not cached) exactly as
+        :func:`lower_degraded` does.
+        """
+        key = (_program_key(program),
+               frozenset(int(s) for s in failed))
+        with self._lock:
+            got = self._get(self._degraded, key)
+            if got is None:
+                got = lower_degraded(program, set(failed))
+                self._put(self._degraded, key, got)
+            return got
+
+
+#: Module-level default — all engines/plans share one schedule cache.
+SCHEDULE_CACHE = ScheduleCache()

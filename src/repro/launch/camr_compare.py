@@ -1,9 +1,3 @@
-import os
-if "--xla_force_host_platform_device_count" not in os.environ.get(
-        "XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
-# ^ before any jax import.
-
 """§Perf harness: the paper's technique on the wire.
 
 Lowers + compiles THREE gradient-aggregation schedules for the same
@@ -20,11 +14,26 @@ Also reports the analytic byte model (camr_collective_bytes) so the HLO
 parse can be cross-checked.
 
     PYTHONPATH=src python -m repro.launch.camr_compare --q 4 --k 4 --d 4096
+
+``--stream W`` additionally measures multi-wave throughput: W waves
+dispatched serially (block per wave) vs. through the async,
+double-buffered :class:`~repro.core.collective.ShuffleStream`
+(DESIGN.md §9), with outputs verified against the per-wave oracle.
+
+    PYTHONPATH=src python -m repro.launch.camr_compare --q 2 --k 3 \\
+        --d 256 --stream 8
 """
+
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+# ^ before any jax import.
 
 import argparse
 import functools
 import json
+import time
 
 import numpy as np
 
@@ -33,8 +42,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
-from repro.core.collective import (CAMRPlan, camr_collective_bytes,
-                                   camr_shuffle, make_plan,
+from repro.core.collective import (CAMRPlan, ShuffleStream,
+                                   camr_collective_bytes, camr_shuffle,
+                                   camr_shuffle_reference, make_plan,
+                                   scatter_contributions,
                                    uncoded_reduce_scatter)
 from repro.launch.hlo_stats import collective_stats
 
@@ -82,11 +93,57 @@ def lower_schedules(q: int, k: int, d: int) -> dict:
     return out
 
 
+def measure_stream(q: int, k: int, d: int, waves: int,
+                   wave_batch: int = 2, depth: int = 2) -> dict:
+    """Serial-dispatch vs. ShuffleStream wall time over ``waves`` waves
+    of random contributions (outputs checked against the oracle)."""
+    plan = make_plan(q, k, d)
+    K = plan.K
+    mesh = make_mesh((K,), ("camr",))
+    rng = np.random.default_rng(0)
+    bgs = [rng.standard_normal((plan.J, k, K, d)).astype(np.float32)
+           for _ in range(waves)]
+    contribs = [scatter_contributions(plan, bg) for bg in bgs]
+
+    serial_fn = jax.jit(shard_map(
+        lambda c: camr_shuffle(plan, c[0], axis_name="camr")[None],
+        mesh=mesh, in_specs=P("camr"), out_specs=P("camr")))
+    jax.block_until_ready(serial_fn(contribs[0]))      # compile
+    t0 = time.perf_counter()
+    serial_out = [np.asarray(jax.block_until_ready(serial_fn(c)))
+                  for c in contribs]
+    t_serial = time.perf_counter() - t0
+
+    stream = ShuffleStream(q, k, d, mesh=mesh, wave_batch=wave_batch,
+                           depth=depth)
+    # compile every stack width the timed run will dispatch (full
+    # batches of W=wave_batch, plus the trailing partial batch)
+    stream.run_waves(contribs[:wave_batch])
+    if waves % wave_batch:
+        stream.run_waves(contribs[:waves % wave_batch])
+    t0 = time.perf_counter()
+    outs = stream.run_waves(contribs)
+    t_stream = time.perf_counter() - t0
+
+    for out, bg, ser in zip(outs, bgs, serial_out):
+        np.testing.assert_allclose(out, camr_shuffle_reference(plan, bg),
+                                   rtol=2e-5, atol=2e-6)
+        np.testing.assert_array_equal(out, ser)        # bit-identical
+    return dict(waves=waves, wave_batch=wave_batch, depth=depth,
+                serial_s=t_serial, stream_s=t_stream,
+                speedup=t_serial / t_stream,
+                stream_wps=waves / t_stream)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--k", type=int, default=4)
     ap.add_argument("--d", type=int, default=4096)
+    ap.add_argument("--stream", type=int, default=0, metavar="W",
+                    help="also time W waves: serial dispatch vs "
+                         "ShuffleStream (async + d-stacked batching)")
+    ap.add_argument("--wave-batch", type=int, default=2)
     args = ap.parse_args()
     res = lower_schedules(args.q, args.k, args.d)
     print(json.dumps(res, indent=1, default=str))
@@ -95,6 +152,13 @@ def main():
     for m, b in w.items():
         print(f"{m:10s} wire={b / 2**20:9.2f} MiB  "
               f"({b / base:6.3f}x of allreduce)")
+    if args.stream:
+        s = measure_stream(args.q, args.k, args.d, args.stream,
+                           wave_batch=args.wave_batch)
+        print(f"stream     {s['waves']} waves: serial="
+              f"{s['serial_s'] * 1e3:.1f}ms  pipelined="
+              f"{s['stream_s'] * 1e3:.1f}ms  "
+              f"({s['speedup']:.2f}x, {s['stream_wps']:.1f} waves/s)")
 
 
 if __name__ == "__main__":

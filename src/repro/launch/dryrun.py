@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
-# ^ MUST precede every other import (jax locks the device count on init).
-
 """Multi-pod dry-run — deliverable (e).
 
 For every (architecture x input shape) cell, ``jax.jit(step).lower(...)
@@ -20,6 +15,11 @@ Usage:
         --shape train_4k --mesh single   # one cell
     PYTHONPATH=src python -m repro.launch.dryrun --all  # every cell
 """
+
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ^ MUST precede the jax import (jax locks the device count on init).
 
 import argparse
 import json

@@ -1,6 +1,9 @@
-"""Distributed runtime: training loops, fault tolerance, serving."""
+"""Distributed runtime: training loops, fault tolerance, serving, and
+the pipelined multi-wave JobStream scheduler (DESIGN.md §9)."""
 
 from .train_loop import Trainer, MultiModelCAMRTrainer
+from .jobstream import JobSpec, JobStream, StreamReport
 from . import fault, serve
 
-__all__ = ["Trainer", "MultiModelCAMRTrainer", "fault", "serve"]
+__all__ = ["Trainer", "MultiModelCAMRTrainer", "JobSpec", "JobStream",
+           "StreamReport", "fault", "serve"]

@@ -20,9 +20,11 @@ the load inflation; the straggler path is identical (a straggler is a
 failure with a deadline). The degraded schedule is not patched at run
 time: :func:`repro.core.schedule.lower_degraded` RE-LOWERS the compiled
 :class:`~repro.core.schedule.ShuffleProgram` against the surviving
-server set, and the engine here interprets the result. Elastic
-re-planning rebuilds the design for a new K and quantifies data
-movement.
+server set, and the engine here interprets the result. The re-lowering
+goes through :data:`repro.core.schedule.SCHEDULE_CACHE`, keyed by the
+survivor set, so a stream of waves on a degraded cluster pays it once
+(DESIGN.md §7/§9). Elastic re-planning rebuilds the design for a new K
+and quantifies data movement.
 """
 
 from __future__ import annotations
@@ -34,7 +36,7 @@ import numpy as np
 from repro.core.designs import factorize_cluster, make_design
 from repro.core.engine import CAMRConfig, CAMREngine
 from repro.core.placement import make_placement
-from repro.core.schedule import DegradedProgram, lower_degraded
+from repro.core.schedule import SCHEDULE_CACHE, DegradedProgram
 from repro.core.shuffle import Transmission
 
 __all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport"]
@@ -56,8 +58,10 @@ class DegradedCAMREngine(CAMREngine):
                  **kw):
         super().__init__(cfg, map_fn, **kw)
         self.failed = set(failed)
-        # raises ValueError when the loss exceeds the redundancy
-        self.degraded: DegradedProgram = lower_degraded(
+        # raises ValueError when the loss exceeds the redundancy; the
+        # re-lowering is cached per (configuration, survivor set), so a
+        # JobStream of waves on a degraded cluster pays it once
+        self.degraded: DegradedProgram = SCHEDULE_CACHE.degraded(
             self.program, self.failed)
 
     # -- function migration -------------------------------------------- #

@@ -1,0 +1,272 @@
+"""JobStream — a pipelined multi-wave CAMR runtime (DESIGN.md §9).
+
+A *wave* is one complete CAMR execution: ``J = q**(k-1)`` aggregated
+MapReduce jobs pushed through Map -> per-batch Combine -> 3-stage coded
+Shuffle -> Reduce on the ``K = q*k``-server cluster. The serial baseline
+(:meth:`repro.core.engine.CAMREngine.run_stream`) runs waves strictly
+one at a time — the shuffle machinery idles during map and vice versa,
+exactly the waste the coded-MapReduce line of work (Li et al.,
+1512.01625 / 1604.07086) identifies as dominating job time.
+
+:class:`JobStream` streams heterogeneous waves through the cluster with
+three cooperating mechanisms, all byte-preserving:
+
+* **schedule caching** — every engine pulls its lowered
+  :class:`~repro.core.schedule.ShuffleProgram` (and any degraded
+  re-lowering) from the structural
+  :data:`~repro.core.schedule.SCHEDULE_CACHE`, so lowering cost is paid
+  once per ``(q, k, gamma, label_perm, Q, survivor-set)`` configuration
+  instead of once per wave.
+* **wave batching** — same-shaped waves are stacked along the value
+  axis ``d`` and run as a SINGLE ShuffleProgram execution. The XOR
+  codec and any elementwise combiner act independently per value
+  element, so concatenation commutes with the whole pipeline and the
+  split results are bit-identical to serial runs (tested in
+  tests/test_jobstream.py).
+* **software pipelining** — the map/aggregate phase of batch ``t+1``
+  runs on a prefetch thread while the main thread drives the shuffle +
+  reduce of batch ``t`` (double buffering: at most TWO batches of
+  aggregates are alive at any time; memory cost model in DESIGN.md §9).
+
+The SPMD counterpart — async, double-buffered dispatch of the shard_map
+executor — is :class:`repro.core.collective.ShuffleStream`; this module
+is the host-side runtime and the bit-exact reference for it.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.schedule import SCHEDULE_CACHE
+
+__all__ = ["JobSpec", "JobStream", "StreamReport"]
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One wave submitted to a :class:`JobStream`.
+
+    ``datasets[j][n]`` is subfile ``n`` of job ``j`` (the engine's
+    :meth:`~repro.core.engine.CAMREngine.run` input); ``map_fn`` and
+    ``combine`` follow the engine's contract. Waves batch together only
+    when they share :meth:`shape_key` — the schedule shape AND the
+    combiner (stacking along ``d`` requires the same elementwise
+    combine on both sides of the seam). Waves in one batch must also
+    produce the same value dtype (``np.concatenate`` would silently
+    promote mixed dtypes, changing the bits): declare ``value_dtype``
+    to pre-split mixed-dtype streams into separate batches; undeclared
+    mismatches are detected at map time and raise.
+    """
+
+    cfg: CAMRConfig
+    map_fn: Callable
+    datasets: Sequence = field(repr=False)
+    combine: Callable = np.add
+    name: str = ""
+    value_dtype: object = None
+
+    def shape_key(self) -> tuple:
+        c = self.cfg
+        dt = (None if self.value_dtype is None
+              else np.dtype(self.value_dtype).str)
+        return (c.q, c.k, c.gamma, c.num_functions(), self.combine, dt)
+
+
+@dataclass
+class StreamReport:
+    """What the last :meth:`JobStream.run` did (for benchmarks/tests)."""
+
+    waves: int
+    batches: int
+    cache_hits: int       # SCHEDULE_CACHE hits during the run
+    cache_misses: int     # lowerings actually paid during the run
+    pipelined: bool
+
+
+class JobStream:
+    """Pipelined multi-wave scheduler over the numpy CAMR engine.
+
+    Parameters
+    ----------
+    failed
+        Optional failed-server set: waves run on the degraded cluster
+        via :class:`repro.runtime.fault.DegradedCAMREngine`, whose
+        survivor-set re-lowering is served from the schedule cache.
+    batching
+        Stack same-shaped waves along ``d`` into one engine pass
+        (default on). ``wave_batch`` caps the stack width — the default
+        of 4 keeps batches small enough that homogeneous streams still
+        pipeline and bounds live memory at ``2 * wave_batch`` waves'
+        aggregates (the double buffer); ``wave_batch=None`` removes the
+        cap (one maximal batch per shape, no overlap within a shape).
+    pipeline
+        Overlap map/aggregate of the next batch with shuffle+reduce of
+        the current one on a prefetch thread (default on).
+    """
+
+    DEFAULT_WAVE_BATCH = 4
+
+    def __init__(self, *, failed: set[int] | None = None,
+                 batching: bool = True,
+                 wave_batch: int | None = DEFAULT_WAVE_BATCH,
+                 pipeline: bool = True):
+        if wave_batch is not None and wave_batch < 1:
+            raise ValueError("wave_batch must be >= 1 (or None for "
+                             "no cap)")
+        self.failed = set(failed) if failed else None
+        self.batching = batching
+        self.wave_batch = wave_batch
+        self.pipeline = pipeline
+        self.last_report: StreamReport | None = None
+
+    # ------------------------------------------------------------------ #
+    # batching plan
+    # ------------------------------------------------------------------ #
+    def _plan_batches(self, specs: list[JobSpec]) -> list[list[int]]:
+        """Group submission indices by shape key (first-seen order),
+        splitting groups at ``wave_batch``."""
+        if not self.batching:
+            return [[i] for i in range(len(specs))]
+        groups: dict = {}
+        order: list = []
+        for i, sp in enumerate(specs):
+            key = sp.shape_key()
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(i)
+        cap = (max((len(v) for v in groups.values()), default=1)
+               if self.wave_batch is None else self.wave_batch)
+        out = []
+        for key in order:
+            idxs = groups[key]
+            out.extend(idxs[a:a + cap] for a in range(0, len(idxs), cap))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # one batch = one engine pass over d-stacked waves
+    # ------------------------------------------------------------------ #
+    def _make_engine(self, specs: list[JobSpec], idxs: list[int]):
+        """Build the batched engine + datasets for one batch.
+
+        Returns ``(engine, datasets, widths)`` where ``widths[w]`` is
+        filled with wave ``w``'s value width after the map phase runs.
+        """
+        batch = [specs[i] for i in idxs]
+        cfg = batch[0].cfg
+        W = len(batch)
+        widths: list = [None] * W
+
+        def map_fn(job, subfiles):
+            vals = []
+            for w, sp in enumerate(batch):
+                v = np.asarray(sp.map_fn(job, subfiles[w]))
+                widths[w] = v.shape[1] if v.ndim == 2 else None
+                vals.append(v)
+            if W == 1:
+                return vals[0]
+            if len({v.dtype for v in vals}) > 1:
+                raise ValueError(
+                    "waves with different value dtypes cannot be "
+                    "stacked bit-exactly (np.concatenate would "
+                    "promote); declare JobSpec.value_dtype so they "
+                    "batch separately, or run with batching=False: "
+                    f"{[str(v.dtype) for v in vals]}")
+            return np.concatenate(vals, axis=1)
+
+        J, N = cfg.J, cfg.N
+        for sp in batch:
+            # same checks CAMREngine.run applies — truncating or
+            # index-erroring here would diverge from the serial oracle
+            if len(sp.datasets) != J:
+                raise ValueError(
+                    f"spec {sp.name!r}: need {J} job datasets, got "
+                    f"{len(sp.datasets)}")
+            for ds in sp.datasets:
+                if len(ds) != N:
+                    raise ValueError(
+                        f"spec {sp.name!r}: each job needs N={N} "
+                        "subfiles")
+        datasets = [
+            [tuple(sp.datasets[j][n] for sp in batch) for n in range(N)]
+            for j in range(J)
+        ]
+        if self.failed:
+            from repro.runtime.fault import DegradedCAMREngine
+            eng = DegradedCAMREngine(cfg, map_fn, self.failed,
+                                     combine=batch[0].combine)
+        else:
+            eng = CAMREngine(cfg, map_fn, combine=batch[0].combine)
+        return eng, datasets, widths
+
+    @staticmethod
+    def _split_results(results, widths: list) -> list:
+        """Slice per-server ``(job, fn) -> (sum(widths),)`` values back
+        into per-wave result structures (submission order preserved by
+        the caller)."""
+        offs = np.concatenate([[0], np.cumsum(widths)])
+        out = []
+        for w in range(len(widths)):
+            a, b = int(offs[w]), int(offs[w + 1])
+            out.append([{key: v[a:b] for key, v in res.items()}
+                        for res in results])
+        return out
+
+    # ------------------------------------------------------------------ #
+    # the stream
+    # ------------------------------------------------------------------ #
+    def run(self, specs: Sequence[JobSpec]) -> list:
+        """Run every wave; returns per-wave results in submission order
+        (each exactly what :meth:`CAMREngine.run` returns for that
+        wave — bit-identical to the serial oracle)."""
+        specs = list(specs)
+        if not specs:
+            self.last_report = StreamReport(
+                waves=0, batches=0, cache_hits=0, cache_misses=0,
+                pipelined=False)
+            return []
+        results: list = [None] * len(specs)
+        batches = self._plan_batches(specs)
+        s0 = SCHEDULE_CACHE.stats()
+
+        def prepare(idxs):
+            # dataset validation + map phase: the prefetch-lane half of
+            # the pipeline
+            eng, datasets, widths = self._make_engine(specs, idxs)
+            eng.map_phase(datasets)
+            return eng, widths, idxs
+
+        def finish(eng, widths, idxs):
+            eng.shuffle_phase()
+            res = eng.reduce_phase()
+            split = self._split_results(res, widths)
+            for w, spec_idx in enumerate(idxs):
+                results[spec_idx] = split[w]
+
+        pipelined = self.pipeline and len(batches) > 1
+        if pipelined:
+            # double buffer: while batch t shuffles+reduces here, batch
+            # t+1 maps on the worker — at most 2 engines alive
+            with ThreadPoolExecutor(max_workers=1) as pool:
+                fut = pool.submit(prepare, batches[0])
+                for t in range(len(batches)):
+                    eng, widths, idxs = fut.result()
+                    if t + 1 < len(batches):
+                        fut = pool.submit(prepare, batches[t + 1])
+                    finish(eng, widths, idxs)
+        else:
+            for idxs in batches:
+                finish(*prepare(idxs))
+
+        s1 = SCHEDULE_CACHE.stats()
+        self.last_report = StreamReport(
+            waves=len(specs), batches=len(batches),
+            cache_hits=s1["hits"] - s0["hits"],
+            cache_misses=s1["misses"] - s0["misses"],
+            pipelined=pipelined)
+        return results

@@ -9,7 +9,8 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core.collective import (CAMRPlan, camr_collective_bytes,
+from repro.core.collective import (CAMRPlan, ShuffleStream,
+                                   camr_collective_bytes,
                                    expected_collective_calls, make_plan)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -105,6 +106,48 @@ _RUN_ENGINE = textwrap.dedent("""
 """)
 
 
+# ShuffleStream (DESIGN.md §9): async double-buffered multi-wave
+# dispatch, same-shaped waves stacked along d into ONE program
+# execution. Per-wave outputs must be bit-identical to single-wave
+# dispatch (the codec is elementwise per value column).
+_RUN_STREAM = textwrap.dedent("""
+    import numpy as np, jax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.core.collective import (ShuffleStream, make_plan,
+        camr_shuffle, camr_shuffle_reference, scatter_contributions)
+    q, k, d, waves = {q}, {k}, {d}, 5
+    plan = make_plan(q, k, d); K = plan.K
+    rng = np.random.default_rng(3)
+    bgs = [rng.standard_normal((plan.J, k, K, d)).astype(np.float32)
+           for _ in range(waves)]
+    contribs = [scatter_contributions(plan, bg) for bg in bgs]
+    mesh = make_mesh((K,), ('camr',))
+    serial_fn = jax.jit(shard_map(
+        lambda c: camr_shuffle(plan, c[0], axis_name='camr')[None],
+        mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+    serial = [np.asarray(serial_fn(c)) for c in contribs]
+    for wave_batch in (1, 2, 3):
+        stream = ShuffleStream(q, k, d, mesh=mesh, wave_batch=wave_batch,
+                               depth=2)
+        outs = stream.run_waves(contribs)
+        assert len(outs) == waves
+        for out, bg, ser in zip(outs, bgs, serial):
+            np.testing.assert_allclose(
+                out, camr_shuffle_reference(plan, bg),
+                rtol=2e-5, atol=2e-6)
+            np.testing.assert_array_equal(out, ser)
+    # incremental submit/drain keeps submission order
+    stream = ShuffleStream(q, k, d, mesh=mesh, wave_batch=2, depth=1)
+    for c in contribs[:3]:
+        stream.submit(c)
+    outs = stream.drain()
+    for out, ser in zip(outs, serial):
+        np.testing.assert_array_equal(out, ser)
+    print('OK')
+""")
+
+
 def _run_subprocess(code: str, ndev: int) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
@@ -133,6 +176,14 @@ def test_camr_shuffle_matches_engine_oracle(q, k, d, seed):
     assert "OK" in out
 
 
+@pytest.mark.parametrize("q,k,d", [(2, 3, 8), (3, 4, 9)])
+def test_shuffle_stream_multidevice(q, k, d):
+    """Async double-buffered ShuffleStream == per-wave serial dispatch,
+    bit for bit, at every wave_batch width."""
+    out = _run_subprocess(_RUN_STREAM.format(q=q, k=k, d=d), ndev=q * k)
+    assert "OK" in out
+
+
 def test_expected_collective_calls_model():
     plan = make_plan(4, 3, 16)
     want = expected_collective_calls(plan, "batched", "all_to_all")
@@ -151,6 +202,17 @@ def test_plan_validation():
         make_plan(2, 2, 8)  # k >= 3 for the TPU path
     with pytest.raises(ValueError):
         make_plan(2, 3, 7)  # d not divisible by k-1
+
+
+def test_shuffle_stream_validation():
+    """Width/k checks fire at construction, never mid-stream (a partial
+    trailing batch must not be able to fail after waves completed)."""
+    with pytest.raises(ValueError):
+        ShuffleStream(2, 2, 8, mesh=None)   # k >= 3
+    with pytest.raises(ValueError):
+        ShuffleStream(2, 3, 9, mesh=None)   # d % (k-1)
+    with pytest.raises(ValueError):
+        ShuffleStream(2, 3, 8, mesh=None, depth=0)
 
 
 def test_plan_tables_consistent():

@@ -1,0 +1,273 @@
+"""JobStream runtime + structural schedule cache (DESIGN.md §9).
+
+The pipelined multi-wave runtime must be BIT-identical to the serial
+engine loop (its correctness oracle), and the schedule cache must serve
+repeated configurations — including degraded survivor sets — from one
+lowering.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.schedule import SCHEDULE_CACHE, ScheduleCache
+from repro.runtime.fault import DegradedCAMREngine
+from repro.runtime.jobstream import JobSpec, JobStream
+
+
+def _identity_map(job, sf):
+    return sf
+
+
+def make_specs(q, k, waves, d=4, seed=0, gamma=1):
+    cfg = CAMRConfig(q=q, k=k, gamma=gamma)
+    Q = cfg.num_functions()
+    rng = np.random.default_rng(seed)
+    out = []
+    for w in range(waves):
+        ds = [[rng.standard_normal((Q, d)).astype(np.float32)
+               for _ in range(cfg.N)] for _ in range(cfg.J)]
+        out.append(JobSpec(cfg, _identity_map, ds, name=f"wave{w}"))
+    return out
+
+
+def assert_results_equal(want, got):
+    """Exact (bitwise) equality of two engine result structures."""
+    assert len(want) == len(got)
+    for a, b in zip(want, got):
+        assert a.keys() == b.keys()
+        for key in a:
+            assert np.array_equal(a[key], b[key]), key
+
+
+# --------------------------------------------------------------------- #
+# schedule cache
+# --------------------------------------------------------------------- #
+class TestScheduleCache:
+    def test_program_hit_is_identity(self):
+        c = ScheduleCache()
+        p1 = c.program(2, 3, Q=6)
+        assert c.stats()["misses"] == 1
+        p2 = c.program(2, 3, Q=6)
+        assert p1 is p2
+        assert c.stats()["hits"] == 1
+
+    def test_program_miss_on_new_shape(self):
+        c = ScheduleCache()
+        c.program(2, 3, Q=6)
+        c.program(3, 3, Q=9)
+        assert c.stats()["misses"] == 2
+        assert c.stats()["programs"] == 2
+
+    def test_width_variants_share_tables(self):
+        """d changes only the runtime packet split — all widths of one
+        configuration share the base lowering's tables."""
+        c = ScheduleCache()
+        p4 = c.program(2, 3, Q=6, d=4)
+        p8 = c.program(2, 3, Q=6, d=8)
+        assert p4.d == 4 and p8.d == 8
+        assert p4.s1 is p8.s1 and p4.s2 is p8.s2
+        assert p4.placement is p8.placement
+        assert c.program(2, 3, Q=6, d=4) is p4
+
+    def test_identity_label_perm_collapses(self):
+        c = ScheduleCache()
+        p1 = c.program(2, 3, Q=6)
+        ident = [tuple(range(3))] * 4
+        assert c.program(2, 3, Q=6, label_perm=ident) is p1
+
+    def test_invalid_width_rejected(self):
+        with pytest.raises(ValueError):
+            ScheduleCache().program(2, 3, Q=6, d=7)
+
+    def test_degraded_hit_and_survivor_set_keying(self):
+        """Same survivor set -> one lowering; a changed survivor set is
+        a different key (the invalidation rule of DESIGN.md §9)."""
+        c = ScheduleCache()
+        prog = c.program(2, 3, Q=6)
+        d0 = c.degraded(prog, {0})
+        assert c.degraded(prog, {0}) is d0           # hit
+        d1 = c.degraded(prog, {1})                   # new survivor set
+        assert d1 is not d0
+        assert d1.failed == frozenset({1})
+        assert c.stats()["degraded"] == 2
+        c.clear()
+        assert c.stats() == dict(hits=0, misses=0, programs=0,
+                                 degraded=0)
+        prog = c.program(2, 3, Q=6)
+        assert c.degraded(prog, {0}) is not d0       # cold after clear
+
+    def test_degraded_unrecoverable_not_cached(self):
+        c = ScheduleCache()
+        prog = c.program(2, 3, Q=6)
+        for _ in range(2):
+            with pytest.raises(ValueError):
+                c.degraded(prog, {0, 1})             # same parallel class
+        assert c.stats()["degraded"] == 0
+
+    def test_lru_bound(self):
+        c = ScheduleCache(maxsize=2)
+        c.program(2, 3, Q=6)
+        c.program(3, 3, Q=9)
+        c.program(2, 4, Q=8)
+        assert c.stats()["programs"] == 2
+
+    def test_engines_share_one_lowering(self):
+        """Two engines of the same configuration hold the SAME program
+        object (lowering paid once per configuration, not per engine)."""
+        cfg = CAMRConfig(q=2, k=3, gamma=1)
+        e1 = CAMREngine(cfg, _identity_map)
+        e2 = CAMREngine(cfg, _identity_map)
+        assert e1.program is e2.program
+        assert e1.placement is e2.placement
+
+
+# --------------------------------------------------------------------- #
+# serial oracle
+# --------------------------------------------------------------------- #
+def test_run_stream_matches_individual_runs():
+    specs = make_specs(2, 3, 3)
+    eng = CAMREngine(specs[0].cfg, _identity_map)
+    stream_res = eng.run_stream([sp.datasets for sp in specs])
+    for sp, got in zip(specs, stream_res):
+        fresh = CAMREngine(sp.cfg, _identity_map)
+        assert_results_equal(fresh.run(sp.datasets), got)
+
+
+# --------------------------------------------------------------------- #
+# pipelined JobStream == serial oracle, bit for bit
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("q,k,waves", [(2, 3, 4), (3, 3, 3), (2, 4, 3)])
+def test_jobstream_bit_identical_to_serial(q, k, waves):
+    specs = make_specs(q, k, waves)
+    got = JobStream().run(specs)
+    oracle = CAMREngine(specs[0].cfg, _identity_map).run_stream(
+        [sp.datasets for sp in specs])
+    for want, res in zip(oracle, got):
+        assert_results_equal(want, res)
+
+
+def test_jobstream_mixed_shapes_submission_order():
+    """Heterogeneous waves: batching regroups by shape, results come
+    back in submission order and match per-wave serial runs."""
+    a = make_specs(2, 3, 2, d=4, seed=1)
+    b = make_specs(3, 3, 2, d=6, seed=2)
+    specs = [a[0], b[0], a[1], b[1]]
+    stream = JobStream()
+    got = stream.run(specs)
+    assert stream.last_report.waves == 4
+    assert stream.last_report.batches == 2
+    for sp, res in zip(specs, got):
+        want = CAMREngine(sp.cfg, sp.map_fn).run(sp.datasets)
+        assert_results_equal(want, res)
+
+
+@pytest.mark.parametrize("kw", [dict(batching=False),
+                                dict(pipeline=False),
+                                dict(batching=False, pipeline=False),
+                                dict(wave_batch=2)])
+def test_jobstream_mode_matrix(kw):
+    """Every scheduler mode (no batching / no pipeline / capped batch)
+    produces the same bits."""
+    specs = make_specs(2, 3, 4, seed=3)
+    got = JobStream(**kw).run(specs)
+    oracle = CAMREngine(specs[0].cfg, _identity_map).run_stream(
+        [sp.datasets for sp in specs])
+    for want, res in zip(oracle, got):
+        assert_results_equal(want, res)
+
+
+def test_jobstream_degraded_matches_and_lowers_once():
+    """Waves on a degraded cluster: bit-identical to the serial
+    DegradedCAMREngine loop, and the survivor-set re-lowering is paid
+    once for the whole stream (not once per wave)."""
+    specs = make_specs(2, 3, 3, seed=4)
+    s0 = SCHEDULE_CACHE.stats()
+    # batching=False -> one engine per wave, so cache behavior is visible
+    got = JobStream(failed={0}, batching=False).run(specs)
+    s1 = SCHEDULE_CACHE.stats()
+    # 3 engines queried program + degraded; at most one degraded (and
+    # one program) lowering was actually paid
+    assert s1["misses"] - s0["misses"] <= 2
+    assert s1["hits"] - s0["hits"] >= 4
+    for sp, res in zip(specs, got):
+        want = DegradedCAMREngine(sp.cfg, sp.map_fn, {0}).run(sp.datasets)
+        assert_results_equal(want, res)
+
+
+def test_degraded_cache_shared_across_widths():
+    """lower_degraded reads only width-independent tables — all shard
+    widths of one configuration share the survivor-set entry."""
+    c = ScheduleCache()
+    p4 = c.program(2, 3, Q=6, d=4)
+    p8 = c.program(2, 3, Q=6, d=8)
+    assert c.degraded(p4, {0}) is c.degraded(p8, {0})
+    assert c.stats()["degraded"] == 1
+
+
+def test_jobstream_default_wave_batch_pipelines_homogeneous():
+    """The default cap splits a homogeneous stream into several batches
+    so the map/shuffle overlap actually engages (and memory stays at
+    the documented 2*wave_batch waves)."""
+    specs = make_specs(2, 3, JobStream.DEFAULT_WAVE_BATCH * 2, seed=8)
+    stream = JobStream()
+    got = stream.run(specs)
+    assert stream.last_report.batches == 2
+    assert stream.last_report.pipelined
+    oracle = CAMREngine(specs[0].cfg, _identity_map).run_stream(
+        [sp.datasets for sp in specs])
+    for want, res in zip(oracle, got):
+        assert_results_equal(want, res)
+
+
+def test_jobstream_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        JobStream(wave_batch=0)
+    specs = make_specs(2, 3, 1, seed=9)
+    short = JobSpec(specs[0].cfg, _identity_map, specs[0].datasets[:-1])
+    with pytest.raises(ValueError, match="job datasets"):
+        JobStream().run([short])
+    extra_ds = [list(job) for job in specs[0].datasets]
+    extra_ds[0] = extra_ds[0] + [extra_ds[0][0]]   # N+1 subfiles
+    extra = JobSpec(specs[0].cfg, _identity_map, extra_ds)
+    with pytest.raises(ValueError, match="subfiles"):
+        JobStream().run([extra])
+
+
+def test_jobstream_empty_run():
+    stream = JobStream()
+    assert stream.run([]) == []
+    assert stream.last_report.waves == 0
+
+
+def test_jobstream_mixed_dtype_raises_unless_declared():
+    """Stacking mixed value dtypes would silently promote — undeclared
+    mismatches raise; declared value_dtype splits the batches and each
+    wave matches its serial run bit for bit."""
+    from dataclasses import replace
+
+    f32 = make_specs(2, 3, 1, seed=6)[0]
+    f64_ds = [[sf.astype(np.float64) for sf in job]
+              for job in make_specs(2, 3, 1, seed=7)[0].datasets]
+    f64 = JobSpec(f32.cfg, _identity_map, f64_ds)
+    with pytest.raises(ValueError, match="dtype"):
+        JobStream().run([f32, f64])
+    tagged = [replace(f32, value_dtype=np.float32),
+              replace(f64, value_dtype=np.float64)]
+    stream = JobStream()
+    got = stream.run(tagged)
+    assert stream.last_report.batches == 2
+    for sp, res in zip(tagged, got):
+        want = CAMREngine(sp.cfg, sp.map_fn).run(sp.datasets)
+        assert_results_equal(want, res)
+
+
+def test_jobstream_wave_batch_cap():
+    specs = make_specs(2, 3, 5, seed=5)
+    stream = JobStream(wave_batch=2)
+    got = stream.run(specs)
+    assert stream.last_report.batches == 3      # 2 + 2 + 1
+    oracle = CAMREngine(specs[0].cfg, _identity_map).run_stream(
+        [sp.datasets for sp in specs])
+    for want, res in zip(oracle, got):
+        assert_results_equal(want, res)
