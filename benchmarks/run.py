@@ -2,21 +2,31 @@
 """Benchmark harness — deliverable (d).
 
     PYTHONPATH=src python -m benchmarks.run [--only loads,jobs,...]
+                                            [--json PATH]
 
 Tables:
   loads      — §IV stage loads + §V CAMR==CCDC comparison (measured)
   jobs       — Table III job minima (K=100)
-  encoding   — §I-A encoding-complexity claim
+  encoding   — §I-A encoding claim + fused-vs-multipass codec (§10)
   fault      — degraded-mode load inflation (DESIGN.md §7)
   e2e        — multi-model training integration (paper's DL use case)
   collective — TPU p2p byte model, CAMR vs ring psum
   schedule   — ShuffleProgram lowering + batched-vs-looped shuffle time
   jobstream  — pipelined multi-wave stream vs serial engine loop (§9)
   roofline   — §Roofline summary from the dry-run artifacts (if present)
+
+``--json PATH`` additionally writes machine-readable results: every row
+verbatim (suites may attach ``config``, ``median_us``/``p10_us``/
+``p90_us`` spreads and ``speedup`` beyond the CSV columns) plus
+backend/timing metadata — CI uploads the file as the bench-trajectory
+artifact (.github/workflows/ci.yml).
 """
 
 import argparse
+import json
+import platform
 import sys
+import time
 
 
 def _roofline_rows():
@@ -60,23 +70,54 @@ SUITES = {
 }
 
 
+def _backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # noqa: BLE001 — jax is optional for pure suites
+        return "none"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable results to PATH")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
+    report = {
+        "schema": 1,
+        "generated_by": "benchmarks.run",
+        "unix_time": time.time(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "backend": _backend(),
+        "suites": {},
+        "errors": {},
+    }
     failed = 0
     for n in names:
+        t0 = time.perf_counter()
         try:
-            for row in SUITES[n]():
+            rows = list(SUITES[n]())
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},"
                       f"\"{row['derived']}\"", flush=True)
+            report["suites"][n] = {
+                "elapsed_s": time.perf_counter() - t0,
+                "rows": rows,
+            }
         except Exception as e:  # noqa: BLE001
             failed += 1
-            print(f"{n},nan,\"ERROR: {type(e).__name__}: {e}\"",
-                  flush=True)
+            msg = f"{type(e).__name__}: {e}"
+            print(f"{n},nan,\"ERROR: {msg}\"", flush=True)
+            report["errors"][n] = msg
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"# json report -> {args.json}", file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

@@ -42,9 +42,14 @@ Multi-wave streaming (DESIGN.md §9) is :class:`ShuffleStream`: async,
 double-buffered dispatch of this executor with same-shaped waves
 stacked along ``d`` into a single program execution.
 
-XOR encode/decode run through the Pallas kernels in
+XOR encode/decode default to the FUSED single-pass gather-XOR codec
+(``codec="fused"``, DESIGN.md §10): packet words are read straight out
+of the flat chunk buffer through the schedule's precomputed index
+tables — via the scalar-prefetch Pallas kernels of
 :mod:`repro.kernels.xor_code` when ``use_kernels`` is true (default: on
-TPU backends); the pure-jnp fold is used otherwise.
+TPU backends), via one jnp gather otherwise. ``codec="multipass"``
+keeps the original gather → take_along_axis → fold pipeline as the
+CPU/GPU oracle (bit-identical, tests/test_codec_fused.py).
 """
 
 from __future__ import annotations
@@ -65,7 +70,7 @@ from .schedule import SCHEDULE_CACHE, ShuffleProgram, StageTables
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
            "camr_collective_bytes", "expected_collective_calls",
-           "ShuffleStream"]
+           "ShuffleStream", "CODEC_DTYPES", "check_codec_dtype"]
 
 
 # --------------------------------------------------------------------- #
@@ -140,6 +145,22 @@ def make_plan(q: int, k: int, d: int) -> CAMRPlan:
 # --------------------------------------------------------------------- #
 # bit helpers
 # --------------------------------------------------------------------- #
+#: dtypes the XOR codec can bitcast to 32-bit words.
+CODEC_DTYPES = ("float32", "uint32")
+
+
+def check_codec_dtype(dtype, where: str) -> None:
+    """Entry guard: fail fast, with a fix, instead of a bare TypeError
+    from ``_to_u32`` deep inside the shard_map trace."""
+    if jnp.dtype(dtype).name not in CODEC_DTYPES:
+        raise TypeError(
+            f"{where}: the CAMR XOR codec operates on 32-bit words; "
+            f"supported gradient dtypes are {', '.join(CODEC_DTYPES)}, "
+            f"got {jnp.dtype(dtype).name}. Cast the contributions first "
+            "(e.g. contribs.astype(jnp.float32)) — bf16/f16 values can "
+            "be shuffled at f32 width and cast back after the reduce.")
+
+
 def _to_u32(x):
     if x.dtype == jnp.float32:
         return lax.bitcast_convert_type(x, jnp.uint32)
@@ -178,19 +199,61 @@ def _decode(recv, pkts, mask, use_kernels: bool):
     return recv ^ _xor_reduce(jnp.where(mask[..., None], pkts, 0), axis=1)
 
 
+def _gather_fold(flat, idx, mask, use_kernels: bool):
+    """Fused encode primitive: ``XOR_j flat[idx[:, j]] where mask``.
+
+    The jnp lane is ONE XLA gather of exactly the needed packet words
+    plus a masked fold — memory scales like the Pallas kernel (no
+    ``[n, k, d]`` chunk table, no replication)."""
+    if use_kernels:
+        from repro.kernels.xor_code import xor_encode_gather
+        return xor_encode_gather(flat, idx, mask)
+    return _xor_reduce(jnp.where(mask[..., None], flat[idx], 0), axis=1)
+
+
+def _gather_decode(recv_flat, flat, rsel, idx, mask, use_kernels: bool):
+    """Fused decode primitive: ``recv[rsel] ^ XOR_j flat[idx] where
+    mask`` — rows come out in final chunk-slot order (``rsel`` bakes the
+    round→slot scatter)."""
+    if use_kernels:
+        from repro.kernels.xor_code import xor_decode_gather
+        return xor_decode_gather(recv_flat, flat, rsel, idx, mask)
+    return recv_flat[rsel] ^ _xor_reduce(
+        jnp.where(mask[..., None], flat[idx], 0), axis=1)
+
+
 # --------------------------------------------------------------------- #
 # the coded exchange (stages 1 and 2 share everything; the batched and
-# looped modes differ ONLY in how a round's packets move)
+# looped modes differ ONLY in how a round's packets move).
+#
+# Two codecs execute the same tables (DESIGN.md §10):
+#
+# * ``fused`` (default) — Δ and the decode read packet words straight
+#   out of the flat chunk buffer via the schedule's precomputed flat
+#   index tables (enc_src / dec_src / dec_recv): encode+decode touch
+#   HBM twice total, and the largest transient is the [n, k-1, pk]
+#   recv buffer the exchange produces anyway.
+# * ``multipass`` — the original gather → reshape → take_along_axis →
+#   fold pipeline, kept as the CPU/GPU oracle the fused path must match
+#   bit-for-bit (tests/test_codec_fused.py).
 # --------------------------------------------------------------------- #
-def _encode_stage(u32, T: StageTables, me, *, k, pk, use_kernels):
-    """Prologue shared by both modes: gather my chunk sources and fold
-    the sender-side Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row zero).
+def _encode_stage(u32, T: StageTables, me, *, k, pk, codec, use_kernels):
+    """Prologue shared by both modes: the sender-side
+    Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row zero).
 
-    Returns (packets [n, k, k-1, pk], delta [n, pk])."""
+    Returns ``(ctx, delta [n, pk])`` where ``ctx`` is whatever the
+    matching :func:`_decode_stage` needs to cancel packets — the flat
+    ``u32[·, pk]`` chunk-buffer view (fused) or the materialized packet
+    table ``u32[n, k, k-1, pk]`` (multipass)."""
     def dev(tab):
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
     n = T.n
+    if codec == "fused":
+        flat = u32.reshape(-1, pk)     # free view: packets are contiguous
+        delta = _gather_fold(flat, dev(T.enc_src), dev(T.src_ok),
+                             use_kernels)
+        return flat, delta
     chunks = u32[dev(T.src_jslot), dev(T.src_bslot), jnp.asarray(T.shard)]
     chunks = jnp.where(dev(T.src_ok)[:, :, None], chunks, 0)  # [n, k, d]
     packets = chunks.reshape(n, k, k - 1, pk)
@@ -199,16 +262,27 @@ def _encode_stage(u32, T: StageTables, me, *, k, pk, use_kernels):
     return packets, _fold(my_pkts, use_kernels)
 
 
-def _decode_stage(recv, packets, T: StageTables, me, *, k, pk, use_kernels):
+def _decode_stage(recv, ctx, T: StageTables, me, *, k, pk, codec,
+                  use_kernels):
     """Epilogue shared by both modes: pkt(me, pos(m_r, me)) =
     recv[r] XOR XOR_{p: G[p] not in {m_r, me}} pkt(G[p], pos(m_r, G[p])),
-    then reorder round packets into chunk slots."""
+    decoded words landing in their chunk-slot positions."""
     def dev(tab):
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
     n = T.n
+    if codec == "fused":
+        dec = _gather_decode(
+            recv.reshape(n * (k - 1), pk), ctx,
+            dev(T.dec_recv).reshape(n * (k - 1)),
+            dev(T.dec_src).reshape(n * (k - 1), k),
+            dev(T.dec_mask).reshape(n * (k - 1), k),
+            use_kernels)
+        return dec.reshape(n, (k - 1) * pk)
+    # broadcast (not .repeat) the round axis: XLA folds the replication
+    # into the gather, so oracle memory stays ~[n, k-1, k, pk]
     canc = jnp.take_along_axis(
-        packets[:, None].repeat(k - 1, axis=1),    # [n, k-1, k, k-1, pk]
+        jnp.broadcast_to(ctx[:, None], (n, k - 1, k, k - 1, pk)),
         dev(T.cancel_pos)[:, :, :, None, None], axis=3)[:, :, :, 0]
     cmask = dev(T.cancel_mask)
     dec = _decode(recv.reshape(n * (k - 1), pk),
@@ -221,7 +295,7 @@ def _decode_stage(recv, packets, T: StageTables, me, *, k, pk, use_kernels):
 
 
 def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
-                         q, k, K, pk, router, use_kernels):
+                         q, k, K, pk, router, codec, use_kernels):
     """One coded stage as ``k-1`` grouped collectives (DESIGN.md §4).
 
     Returns decoded chunks ``u32[n, d]`` — row order = the stage's group
@@ -231,8 +305,8 @@ def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
     R = int(T.R)
-    packets, delta = _encode_stage(u32, T, me, k=k, pk=pk,
-                                   use_kernels=use_kernels)
+    ctx, delta = _encode_stage(u32, T, me, k=k, pk=pk, codec=codec,
+                               use_kernels=use_kernels)
     recv = []
     for r in range(1, k):
         if router == "all_to_all":
@@ -257,16 +331,16 @@ def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
             raise ValueError(f"unknown router {router!r}")
         recv.append(flat[slot])                                # [n, pk]
     recv = jnp.stack(recv, axis=1)                             # [n, k-1, pk]
-    return _decode_stage(recv, packets, T, me, k=k, pk=pk,
+    return _decode_stage(recv, ctx, T, me, k=k, pk=pk, codec=codec,
                          use_kernels=use_kernels)
 
 
 def _stage_coded_looped(axis_name, u32, T: StageTables, rounds_list, me, *,
-                        k, pk, use_kernels):
+                        k, pk, codec, use_kernels):
     """Legacy exchange — one ppermute per group per round (benchmark
     baseline; same tables, same encode/decode)."""
-    packets, delta = _encode_stage(u32, T, me, k=k, pk=pk,
-                                   use_kernels=use_kernels)
+    ctx, delta = _encode_stage(u32, T, me, k=k, pk=pk, codec=codec,
+                               use_kernels=use_kernels)
     n = T.n
     valid = jnp.take(jnp.asarray(T.valid), me, axis=0)
     recv = jnp.zeros((n, k - 1, pk), dtype=jnp.uint32)
@@ -277,7 +351,7 @@ def _stage_coded_looped(axis_name, u32, T: StageTables, rounds_list, me, *,
                                perm=list(rounds_list[gi][r - 1]))
             recv = recv.at[gi, r - 1].set(jnp.where(valid[gi], got,
                                                     recv[gi, r - 1]))
-    return _decode_stage(recv, packets, T, me, k=k, pk=pk,
+    return _decode_stage(recv, ctx, T, me, k=k, pk=pk, codec=codec,
                          use_kernels=use_kernels)
 
 
@@ -286,18 +360,26 @@ def _stage_coded_looped(axis_name, u32, T: StageTables, rounds_list, me, *,
 # --------------------------------------------------------------------- #
 def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
                  axis_name: str, mode: str = "batched",
-                 router: str = "all_to_all", use_kernels=None,
-                 debug: bool = False) -> jnp.ndarray:
-    """3-stage CAMR coded shuffle: contribs [J_own, k-1, K, d] -> [J, d]."""
+                 router: str = "all_to_all", codec: str = "fused",
+                 use_kernels=None, debug: bool = False) -> jnp.ndarray:
+    """3-stage CAMR coded shuffle: contribs [J_own, k-1, K, d] -> [J, d].
+
+    ``codec="fused"`` (default) runs the single-pass gather-XOR codec
+    over the schedule's flat index tables; ``codec="multipass"`` is the
+    original multi-pass pipeline, kept as the oracle (DESIGN.md §10).
+    """
     prog = plan.program
     q, k, K, J, J_own, d = (plan.q, plan.k, plan.K, plan.J, plan.J_own,
                             plan.d)
     dtype = contribs.dtype
+    check_codec_dtype(dtype, "camr_shuffle")
     if contribs.shape != (J_own, k - 1, K, d):
         raise ValueError(f"contribs shape {contribs.shape} != "
                          f"{(J_own, k - 1, K, d)}")
     if mode not in ("batched", "looped"):
         raise ValueError(f"unknown mode {mode!r}")
+    if codec not in ("fused", "multipass"):
+        raise ValueError(f"unknown codec {codec!r}")
     use_kernels = _resolve_kernels(use_kernels)
     me = lax.axis_index(axis_name)
     pk = plan.packet_len
@@ -314,11 +396,11 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         if mode == "batched":
             decoded = _stage_coded_batched(
                 axis_name, u32, T, me, q=q, k=k, K=K, pk=pk,
-                router=router, use_kernels=use_kernels)
+                router=router, codec=codec, use_kernels=use_kernels)
         else:
             decoded = _stage_coded_looped(
                 axis_name, u32, T, prog.round_perms(stage), me,
-                k=k, pk=pk, use_kernels=use_kernels)
+                k=k, pk=pk, codec=codec, use_kernels=use_kernels)
         stage_vals[stage] = _from_u32(decoded, dtype)
     stage1_val = stage_vals[1]   # [J, d]; row j valid where I own job j
     stage2_val = stage_vals[2]   # [n_s2, d]; rows at my s2_ord ordinals
@@ -440,7 +522,8 @@ class ShuffleStream:
     def __init__(self, q: int, k: int, d: int, *, mesh,
                  axis_name: str = "camr", depth: int = 2,
                  wave_batch: int = 1, mode: str = "batched",
-                 router: str = "all_to_all", use_kernels=None):
+                 router: str = "all_to_all", codec: str = "fused",
+                 use_kernels=None):
         if k < 3:
             raise ValueError("TPU collective path requires k >= 3")
         if d % (k - 1):
@@ -461,6 +544,9 @@ class ShuffleStream:
         self.wave_batch = wave_batch
         self.mode = mode
         self.router = router
+        if codec not in ("fused", "multipass"):
+            raise ValueError(f"unknown codec {codec!r}")
+        self.codec = codec
         self.use_kernels = use_kernels
         self._jitted: dict[int, object] = {}   # W -> compiled executor
         self._pending: list = []               # waves awaiting dispatch
@@ -481,6 +567,7 @@ class ShuffleStream:
             def body(c):
                 return camr_shuffle(plan, c[0], axis_name=self.axis_name,
                                     mode=self.mode, router=self.router,
+                                    codec=self.codec,
                                     use_kernels=self.use_kernels)[None]
 
             self._jitted[W] = jax.jit(shard_map(
@@ -497,6 +584,14 @@ class ShuffleStream:
                  self.d)
         if tuple(np.shape(contribs)) != shape:
             raise ValueError(f"wave shape {np.shape(contribs)} != {shape}")
+        # dtype guard here, not at dispatch: like the width check above,
+        # a stream must never discover an uncodable wave mid-flight.
+        # getattr, not np.asarray: a device-array wave must not be
+        # synced/copied to host just to read its dtype (dtype-less
+        # inputs still hit camr_shuffle's own entry guard at dispatch)
+        dtype = getattr(contribs, "dtype", None)
+        if dtype is not None:
+            check_codec_dtype(dtype, "ShuffleStream")
         self._pending.append(contribs)
         if len(self._pending) >= self.wave_batch:
             self._dispatch()

@@ -118,6 +118,18 @@ class StageTables:
     cancel_mask: np.ndarray = field(default=None, repr=False)  # [K, n, k-1, k]
     dec_gather: np.ndarray = field(default=None, repr=False)  # [K, n, k-1]
 
+    # fused-codec flat index tables (DESIGN.md §10). Sources are flat
+    # packet rows of the local chunk buffer viewed as
+    # ``u32.reshape(J_own*(k-1)*K*(k-1), pk)`` — d-independent (packet
+    # units), so all shard widths share them like every other table.
+    enc_src: np.ndarray = field(default=None, repr=False)    # [K, n, k]
+    dec_src: np.ndarray = field(default=None, repr=False)    # [K, n, k-1, k]
+    dec_mask: np.ndarray = field(default=None, repr=False)   # [K, n, k-1, k]
+    dec_recv: np.ndarray = field(default=None, repr=False)   # [K, n, k-1]
+    #   dec_recv[s, row, c] = flat row of recv.reshape(n*(k-1), pk) whose
+    #   round packet decodes into chunk slot c — argsort(dec_gather)
+    #   baked at lowering time (no per-trace argsort in the executor).
+
     # batched round routing (see module docstring)
     a2a_send: np.ndarray = field(default=None, repr=False)   # [k-1, K, K, R]
     a2a_recv: np.ndarray = field(default=None, repr=False)   # [k-1, K, n]
@@ -438,6 +450,24 @@ def _lower_stage(stage, rows, groups, chunk_job, chunk_batch, group_vals,
                         cancel_pos[s, li, r - 1, p] = pos(mp, p)
                         cancel_mask[s, li, r - 1, p] = True
 
+    # -- fused-codec flat index tables (DESIGN.md §10) ------------------ #
+    # flat packet row of chunk (jslot, bslot, shard, packet-pos) in the
+    # device's u32 buffer viewed as [J_own*(k-1)*K*(k-1), pk]
+    base = (src_jslot * (k - 1) + src_bslot) * K + shard[None]   # [K, n, k]
+    enc_src = np.where(src_ok, base * (k - 1) + delta_pos, 0).astype(
+        np.int32)
+    # bake argsort(dec_gather): order[s, row, c] = round whose packet
+    # lands in chunk slot c (dec_gather is a permutation wherever the
+    # device is a group member; elsewhere the rows are dead — stable
+    # argsort keeps them deterministic)
+    order = np.argsort(dec_gather, axis=2, kind="stable")        # [K,n,k-1]
+    dec_recv = (order + np.arange(n, dtype=np.int32)[None, :, None]
+                * (k - 1)).astype(np.int32)
+    dec_mask = np.take_along_axis(cancel_mask, order[..., None], axis=2)
+    dec_src = np.take_along_axis(cancel_pos, order[..., None], axis=2)
+    dec_src = np.where(dec_mask, base[:, :, None, :] * (k - 1) + dec_src,
+                       0).astype(np.int32)
+
     # -- routing blocks: shared by both routers ------------------------- #
     # rows per ordered (sender, receiver) pair: fixing two coordinates of
     # the value vector leaves q^(k-3) stage-1 / q^(k-3)*(q-1) stage-2
@@ -483,6 +513,8 @@ def _lower_stage(stage, rows, groups, chunk_job, chunk_batch, group_vals,
         shard=shard, delta_pos=delta_pos,
         cancel_pos=cancel_pos, cancel_mask=cancel_mask,
         dec_gather=dec_gather,
+        enc_src=enc_src, dec_src=dec_src, dec_mask=dec_mask,
+        dec_recv=dec_recv,
         a2a_send=a2a_send, a2a_recv=a2a_recv,
         pp_send=pp_send, pp_recv=pp_recv, pp_perms=tuple(pp_perms),
     )

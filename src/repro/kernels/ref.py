@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from jax import lax
 
 __all__ = ["xor_encode_ref", "xor_fold_ref", "xor_decode_ref",
+           "xor_encode_gather_ref", "xor_decode_gather_ref",
            "aggregate_ref", "flash_attention_ref", "ssd_scan_ref"]
 
 
@@ -38,6 +39,27 @@ def xor_decode_ref(recv: jnp.ndarray, packets: jnp.ndarray,
     """Batched decode oracle: ``recv ^ fold(packets where mask)``."""
     masked = jnp.where(mask[..., None], packets, jnp.uint32(0))
     return recv ^ xor_fold_ref(masked)
+
+
+def xor_encode_gather_ref(chunks: jnp.ndarray, idx: jnp.ndarray,
+                          mask: jnp.ndarray) -> jnp.ndarray:
+    """Fused-encode oracle: ``out[i] = XOR_j chunks[idx[i, j]] & mask``.
+
+    ``chunks: u32[P, pk]``, ``idx: i32[n, m]``, ``mask: bool[n, m]`` —
+    a plain XLA gather + masked fold (the memory-light jnp lane of the
+    fused codec; the Pallas kernel must match it bit-for-bit).
+    """
+    gathered = chunks[idx]                       # [n, m, pk]
+    return xor_fold_ref(jnp.where(mask[..., None], gathered,
+                                  jnp.uint32(0)))
+
+
+def xor_decode_gather_ref(recv: jnp.ndarray, chunks: jnp.ndarray,
+                          rsel: jnp.ndarray, idx: jnp.ndarray,
+                          mask: jnp.ndarray) -> jnp.ndarray:
+    """Fused-decode oracle:
+    ``out[i] = recv[rsel[i]] ^ XOR_j chunks[idx[i, j]] & mask``."""
+    return recv[rsel] ^ xor_encode_gather_ref(chunks, idx, mask)
 
 
 def aggregate_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,

@@ -15,8 +15,27 @@ m-1 separate HLO xors over HBM. The batched variants carry one row per
 coded group — the ShuffleProgram executors call them with the whole
 per-round packet table at once.
 
-Tiling: grid over (row, word-block); each program XOR-folds an
-``(m, BLOCK)`` tile held in VMEM. BLOCK is lane-aligned (multiple of 128).
+Two kernel families (DESIGN.md §10):
+
+* ``xor_fold`` / ``xor_decode`` — dense variants over pre-gathered
+  packet tables. These are the CPU/GPU-oracle building blocks: the
+  caller pays separate HBM passes to gather/replicate the packets
+  before the fold ever runs.
+* ``xor_encode_gather`` / ``xor_decode_gather`` — FUSED variants that
+  read packets straight out of the flat chunk buffer via
+  scalar-prefetched index tables (``PrefetchScalarGridSpec``). The
+  gather happens in the BlockSpec index map, so each packet word moves
+  HBM→VMEM exactly once and no ``[n, k, d]`` / ``[n·(k-1), k, pk]``
+  intermediate is ever materialized. The decode variant additionally
+  scatters each decoded round packet into its final chunk-slot row via
+  a precomputed receive-selector table — the post-hoc
+  ``argsort``/gather of the multipass path is baked into the schedule
+  lowering.
+
+Tiling: grid over (row, word-block[, source]); each program XOR-folds
+lane-aligned ``(1, BLOCK)`` tiles held in VMEM. For the gather kernels
+the source axis is innermost, so the output tile stays resident in VMEM
+across the whole fold (one write-back per (row, block)).
 """
 
 from __future__ import annotations
@@ -26,10 +45,24 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["xor_encode", "xor_fold", "xor_decode"]
+__all__ = ["xor_encode", "xor_fold", "xor_decode",
+           "xor_encode_gather", "xor_decode_gather"]
 
 _BLOCK = 1024  # u32 words per tile; multiple of the 128-lane VPU width
+_LANE = 128
+
+
+def _tile(pk: int, block: int) -> tuple[int, int]:
+    """Lane-aligned (block, padded_pk) for a packet width ``pk``."""
+    blk = min(block, -(-pk // _LANE) * _LANE)
+    return blk, -(-pk // blk) * blk
+
+
+def _mask_words(mask: jnp.ndarray) -> jnp.ndarray:
+    """bool -> u32 0x00000000/0xFFFFFFFF (AND-applicable mask words)."""
+    return jnp.where(mask, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
 
 
 def _resolve_interpret(interpret) -> bool:
@@ -148,3 +181,137 @@ def xor_decode(recv: jnp.ndarray, packets: jnp.ndarray,
         interpret=interpret,
     )(rv, pk, mk)
     return out[:, :n]
+
+
+# --------------------------------------------------------------------- #
+# fused gather-XOR codec (single-pass encode/decode, DESIGN.md §10)
+# --------------------------------------------------------------------- #
+def _encode_gather_kernel(idx_ref, msk_ref, chunk_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(2)
+    term = chunk_ref[...] & msk_ref[i, j]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = term
+
+    @pl.when(j > 0)
+    def _fold():
+        o_ref[...] ^= term
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_encode_gather(chunks: jnp.ndarray, idx: jnp.ndarray,
+                      mask: jnp.ndarray, *, block: int = _BLOCK,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused gather + XOR-fold encode:
+    ``out[i] = XOR_j { chunks[idx[i, j]] : mask[i, j] }``.
+
+    ``chunks: u32[P, pk]`` is the flat packet view of the local chunk
+    buffer (``u32.reshape(-1, pk)`` — free); ``idx: i32[n, m]`` holds
+    flat packet-row sources (``enc_src`` of the schedule lowering) and
+    ``mask: bool[n, m]`` their validity. Invalid entries must carry an
+    in-range index (the lowering bakes 0) — they are AND-masked to the
+    XOR identity inside VMEM, never branched on.
+
+    The gather IS the block index map (scalar-prefetched tables), so
+    encode reads each needed chunk word from HBM exactly once and
+    writes Δ once: one pass, vs gather → reshape → take_along_axis →
+    fold (3 HBM round trips) in the multipass path.
+    """
+    if chunks.dtype != jnp.uint32:
+        raise TypeError("xor_encode_gather expects uint32")
+    interpret = _resolve_interpret(interpret)
+    n, m = idx.shape
+    if mask.shape != (n, m):
+        raise ValueError(f"mask shape {mask.shape} != {(n, m)}")
+    pk = chunks.shape[1]
+    blk, pkp = _tile(pk, block)
+    x = jnp.pad(chunks, ((0, 0), (0, pkp - pk)))
+    out = pl.pallas_call(
+        _encode_gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n, pkp // blk, m),
+            in_specs=[
+                pl.BlockSpec((1, blk), lambda i, b, j, idx_r, msk_r:
+                             (idx_r[i, j], b)),
+            ],
+            out_specs=pl.BlockSpec((1, blk), lambda i, b, j, *_: (i, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, pkp), jnp.uint32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), _mask_words(mask), x)
+    return out[:, :pk]
+
+
+def _decode_gather_kernel(rsel_ref, idx_ref, msk_ref, recv_ref, chunk_ref,
+                          o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(2)
+    term = chunk_ref[...] & msk_ref[i, j]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = recv_ref[...] ^ term
+
+    @pl.when(j > 0)
+    def _fold():
+        o_ref[...] ^= term
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_decode_gather(recv: jnp.ndarray, chunks: jnp.ndarray,
+                      rsel: jnp.ndarray, idx: jnp.ndarray,
+                      mask: jnp.ndarray, *, block: int = _BLOCK,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused gather + XOR decode + chunk-slot scatter:
+    ``out[i] = recv[rsel[i]] ^ XOR_j { chunks[idx[i, j]] : mask[i, j] }``.
+
+    Output row ``i`` is a CHUNK SLOT (row-major ``(group, slot)``), not
+    a broadcast round: ``rsel: i32[R]`` (``dec_recv`` of the schedule
+    lowering) selects which received round packet lands in each slot —
+    the lowering bakes ``argsort(dec_gather)`` into it, so the
+    multipass path's per-trace argsort + post-hoc ``take_along_axis``
+    disappear. ``idx/mask: [R, m]`` name the cancellation packets as
+    flat rows of ``chunks: u32[P, pk]`` (the same flat chunk buffer the
+    encode reads — the ``[n, k, k-1, pk]`` packet table and the
+    ``(k-1)×``-replicated ``[n, k-1, k, k-1, pk]`` cancellation buffer
+    of the multipass path are never built).
+
+    Single pass: every cancellation word moves HBM→VMEM once via the
+    scalar-prefetched index maps, each output row is written once, in
+    final chunk order.
+    """
+    if recv.dtype != jnp.uint32 or chunks.dtype != jnp.uint32:
+        raise TypeError("xor_decode_gather expects uint32")
+    interpret = _resolve_interpret(interpret)
+    R, m = idx.shape
+    pk = chunks.shape[1]
+    if recv.shape[1] != pk:
+        raise ValueError(f"recv width {recv.shape[1]} != chunks width {pk}")
+    if rsel.shape != (R,):
+        raise ValueError(f"rsel shape {rsel.shape} != {(R,)}")
+    if mask.shape != (R, m):
+        raise ValueError(f"mask shape {mask.shape} != {(R, m)}")
+    blk, pkp = _tile(pk, block)
+    rv = jnp.pad(recv, ((0, 0), (0, pkp - pk)))
+    x = jnp.pad(chunks, ((0, 0), (0, pkp - pk)))
+    out = pl.pallas_call(
+        _decode_gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(R, pkp // blk, m),
+            in_specs=[
+                pl.BlockSpec((1, blk), lambda i, b, j, rsel_r, *_:
+                             (rsel_r[i], b)),
+                pl.BlockSpec((1, blk), lambda i, b, j, rsel_r, idx_r, msk_r:
+                             (idx_r[i, j], b)),
+            ],
+            out_specs=pl.BlockSpec((1, blk), lambda i, b, j, *_: (i, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, pkp), jnp.uint32),
+        interpret=interpret,
+    )(rsel.astype(jnp.int32), idx.astype(jnp.int32), _mask_words(mask),
+      rv, x)
+    return out[:, :pk]

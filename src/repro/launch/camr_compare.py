@@ -50,7 +50,8 @@ from repro.core.collective import (CAMRPlan, ShuffleStream,
 from repro.launch.hlo_stats import collective_stats
 
 
-def lower_schedules(q: int, k: int, d: int) -> dict:
+def lower_schedules(q: int, k: int, d: int,
+                    codec: str = "fused") -> dict:
     plan = make_plan(q, k, d)
     K, J, J_own = plan.K, plan.J, plan.J_own
     mesh = make_mesh((K,), ("camr",))
@@ -65,7 +66,8 @@ def lower_schedules(q: int, k: int, d: int) -> dict:
     out = {"q": q, "k": k, "K": K, "J": J, "d": d}
 
     camr_fn = shard_map(
-        lambda c: camr_shuffle(plan, c[0], axis_name="camr")[None],
+        lambda c: camr_shuffle(plan, c[0], axis_name="camr",
+                               codec=codec)[None],
         mesh=mesh, in_specs=P("camr"), out_specs=P("camr"))
     out["camr_wire"], out["camr_ops"] = _wire(camr_fn)
 
@@ -94,7 +96,8 @@ def lower_schedules(q: int, k: int, d: int) -> dict:
 
 
 def measure_stream(q: int, k: int, d: int, waves: int,
-                   wave_batch: int = 2, depth: int = 2) -> dict:
+                   wave_batch: int = 2, depth: int = 2,
+                   codec: str = "fused") -> dict:
     """Serial-dispatch vs. ShuffleStream wall time over ``waves`` waves
     of random contributions (outputs checked against the oracle)."""
     plan = make_plan(q, k, d)
@@ -106,7 +109,8 @@ def measure_stream(q: int, k: int, d: int, waves: int,
     contribs = [scatter_contributions(plan, bg) for bg in bgs]
 
     serial_fn = jax.jit(shard_map(
-        lambda c: camr_shuffle(plan, c[0], axis_name="camr")[None],
+        lambda c: camr_shuffle(plan, c[0], axis_name="camr",
+                               codec=codec)[None],
         mesh=mesh, in_specs=P("camr"), out_specs=P("camr")))
     jax.block_until_ready(serial_fn(contribs[0]))      # compile
     t0 = time.perf_counter()
@@ -115,7 +119,7 @@ def measure_stream(q: int, k: int, d: int, waves: int,
     t_serial = time.perf_counter() - t0
 
     stream = ShuffleStream(q, k, d, mesh=mesh, wave_batch=wave_batch,
-                           depth=depth)
+                           depth=depth, codec=codec)
     # compile every stack width the timed run will dispatch (full
     # batches of W=wave_batch, plus the trailing partial batch)
     stream.run_waves(contribs[:wave_batch])
@@ -144,8 +148,13 @@ def main():
                     help="also time W waves: serial dispatch vs "
                          "ShuffleStream (async + d-stacked batching)")
     ap.add_argument("--wave-batch", type=int, default=2)
+    ap.add_argument("--codec", choices=("fused", "multipass"),
+                    default="fused",
+                    help="XOR codec lane (DESIGN.md §10): fused "
+                         "single-pass gather kernels vs the multipass "
+                         "oracle")
     args = ap.parse_args()
-    res = lower_schedules(args.q, args.k, args.d)
+    res = lower_schedules(args.q, args.k, args.d, codec=args.codec)
     print(json.dumps(res, indent=1, default=str))
     w = {m: res[f"{m}_wire"] for m in ("camr", "uncoded", "allreduce")}
     base = w["allreduce"]
@@ -154,7 +163,7 @@ def main():
               f"({b / base:6.3f}x of allreduce)")
     if args.stream:
         s = measure_stream(args.q, args.k, args.d, args.stream,
-                           wave_batch=args.wave_batch)
+                           wave_batch=args.wave_batch, codec=args.codec)
         print(f"stream     {s['waves']} waves: serial="
               f"{s['serial_s'] * 1e3:.1f}ms  pipelined="
               f"{s['stream_s'] * 1e3:.1f}ms  "

@@ -46,6 +46,22 @@ from repro.core.schedule import SCHEDULE_CACHE
 
 __all__ = ["JobSpec", "JobStream", "StreamReport"]
 
+#: dtypes the XOR codec cannot bitcast to 32-bit words — rejected at
+#: stream entry, not discovered deep inside a trace (the SPMD
+#: counterpart's ``_to_u32`` would raise a bare TypeError mid-shuffle).
+_HALF_DTYPES = ("float16", "bfloat16")
+
+
+def _check_wave_dtype(dtype, where: str) -> None:
+    name = np.dtype(dtype).name
+    if name in _HALF_DTYPES:
+        raise TypeError(
+            f"{where}: the CAMR coded shuffle moves 32-bit words; "
+            f"half-precision values ({name}) are not supported — map to "
+            "float32 (v.astype(np.float32)) and cast back after the "
+            "reduce. Supported value dtypes: float32/uint32 on the SPMD "
+            "path, any full-width dtype on the numpy engine.")
+
 
 @dataclass(frozen=True)
 class JobSpec:
@@ -69,6 +85,11 @@ class JobSpec:
     combine: Callable = np.add
     name: str = ""
     value_dtype: object = None
+
+    def __post_init__(self):
+        if self.value_dtype is not None:
+            _check_wave_dtype(self.value_dtype,
+                              f"JobSpec {self.name!r}")
 
     def shape_key(self) -> tuple:
         c = self.cfg
@@ -166,6 +187,7 @@ class JobStream:
             vals = []
             for w, sp in enumerate(batch):
                 v = np.asarray(sp.map_fn(job, subfiles[w]))
+                _check_wave_dtype(v.dtype, f"JobStream wave {sp.name!r}")
                 widths[w] = v.shape[1] if v.ndim == 2 else None
                 vals.append(v)
             if W == 1:

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.collective import (CAMRPlan, ShuffleStream,
-                                   camr_collective_bytes,
+                                   camr_collective_bytes, camr_shuffle,
                                    expected_collective_calls, make_plan)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -45,14 +45,20 @@ _RUN = textwrap.dedent("""
         walk(jaxpr.jaxpr)
         return n
 
-    for mode, router in [('batched', 'all_to_all'), ('batched', 'ppermute'),
-                         ('looped', 'all_to_all')]:
+    first = None
+    for mode, router, codec in [('batched', 'all_to_all', 'fused'),
+                                ('batched', 'ppermute', 'fused'),
+                                ('looped', 'all_to_all', 'fused'),
+                                ('batched', 'all_to_all', 'multipass')]:
         fn = shard_map(
             lambda c: camr_shuffle(plan, c[0], axis_name='camr', mode=mode,
-                                   router=router)[None],
+                                   router=router, codec=codec)[None],
             mesh=mesh, in_specs=P('camr'), out_specs=P('camr'))
         out = np.asarray(jax.jit(fn)(contribs))
         np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-6)
+        # fused and multipass codecs are BIT-identical, not just close
+        first = out if first is None else first
+        np.testing.assert_array_equal(out, first, err_msg=(mode, codec))
         counts = count_collectives(jax.make_jaxpr(fn)(contribs))
         want = expected_collective_calls(plan, mode, router)
         got12 = counts['all_to_all'] + counts['ppermute'] - (q - 1)
@@ -202,6 +208,37 @@ def test_plan_validation():
         make_plan(2, 2, 8)  # k >= 3 for the TPU path
     with pytest.raises(ValueError):
         make_plan(2, 3, 7)  # d not divisible by k-1
+
+
+def test_codec_dtype_guard():
+    """bf16/f16 contributions fail AT ENTRY with an actionable message
+    (not a bare TypeError from _to_u32 deep inside the trace)."""
+    import jax.numpy as jnp
+    plan = make_plan(2, 3, 8)
+    bad = jnp.zeros((plan.J_own, plan.k - 1, plan.K, plan.d),
+                    jnp.bfloat16)
+    with pytest.raises(TypeError, match="float32.*bfloat16|bfloat16"):
+        camr_shuffle(plan, bad, axis_name="camr")
+    with pytest.raises(TypeError, match="astype"):
+        camr_shuffle(plan, bad.astype(jnp.float16), axis_name="camr")
+    # the guard names the entry point, so users see WHERE to cast
+    with pytest.raises(TypeError, match="camr_shuffle"):
+        camr_shuffle(plan, bad, axis_name="camr")
+    # ShuffleStream rejects uncodable waves at submit, never mid-flight
+    stream = ShuffleStream(2, 3, 8, mesh=None)
+    wave = np.zeros((stream.K, 2, 2, stream.K, 8), np.float16)
+    with pytest.raises(TypeError, match="ShuffleStream"):
+        stream.submit(wave)
+
+
+def test_codec_validation():
+    import jax.numpy as jnp
+    plan = make_plan(2, 3, 8)
+    ok = jnp.zeros((plan.J_own, plan.k - 1, plan.K, plan.d), jnp.float32)
+    with pytest.raises(ValueError, match="codec"):
+        camr_shuffle(plan, ok, axis_name="camr", codec="nope")
+    with pytest.raises(ValueError, match="codec"):
+        ShuffleStream(2, 3, 8, mesh=None, codec="nope")
 
 
 def test_shuffle_stream_validation():

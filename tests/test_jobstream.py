@@ -262,6 +262,24 @@ def test_jobstream_mixed_dtype_raises_unless_declared():
         assert_results_equal(want, res)
 
 
+def test_jobstream_half_dtype_rejected_at_entry():
+    """f16/bf16 values can't take the 32-bit XOR codec: a declared
+    value_dtype fails at JobSpec construction, an undeclared one at the
+    first map call — both with an actionable cast hint, neither deep
+    inside a shuffle."""
+    f32 = make_specs(2, 3, 1, seed=8)[0]
+    with pytest.raises(TypeError, match="float16.*float32|float32"):
+        JobSpec(f32.cfg, _identity_map, f32.datasets,
+                value_dtype=np.float16)
+
+    def half_map(job, sf):
+        return np.zeros((f32.cfg.num_functions(), 4), np.float16)
+
+    spec = JobSpec(f32.cfg, half_map, f32.datasets, name="halfwave")
+    with pytest.raises(TypeError, match="astype"):
+        JobStream().run([spec])
+
+
 def test_jobstream_wave_batch_cap():
     specs = make_specs(2, 3, 5, seed=5)
     stream = JobStream(wave_batch=2)

@@ -10,7 +10,8 @@ from repro.kernels import ref
 from repro.kernels.aggregate import aggregate
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels.xor_code import xor_decode, xor_encode, xor_fold
+from repro.kernels.xor_code import (xor_decode, xor_decode_gather,
+                                    xor_encode, xor_encode_gather, xor_fold)
 
 
 # --------------------------------------------------------------------- #
@@ -67,6 +68,89 @@ def test_xor_codec_roundtrip():
     mask[:, 0] = False                                   # cancel all but 0
     got = xor_decode(delta, jnp.asarray(pk), jnp.asarray(mask), block=256)
     np.testing.assert_array_equal(np.asarray(got), pk[:, 0])
+
+
+# --------------------------------------------------------------------- #
+# fused gather-XOR codec (single-pass encode/decode)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("P,pk,n,m", [(8, 64, 4, 3), (37, 200, 11, 4),
+                                      (5, 1, 3, 2), (64, 1025, 9, 5)])
+def test_xor_encode_gather_matches_ref(P, pk, n, m):
+    rng = np.random.default_rng(P * 7 + pk + n + m)
+    chunks = rng.integers(0, 2**32, size=(P, pk), dtype=np.uint32)
+    idx = rng.integers(0, P, size=(n, m)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(n, m)).astype(bool)
+    got = xor_encode_gather(jnp.asarray(chunks), jnp.asarray(idx),
+                            jnp.asarray(mask), block=256)
+    want = ref.xor_encode_gather_ref(jnp.asarray(chunks), jnp.asarray(idx),
+                                     jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("P,pk,R,m", [(8, 64, 6, 3), (21, 130, 10, 4),
+                                      (4, 1, 2, 2)])
+def test_xor_decode_gather_matches_ref(P, pk, R, m):
+    rng = np.random.default_rng(P + pk + R + m)
+    chunks = rng.integers(0, 2**32, size=(P, pk), dtype=np.uint32)
+    recv = rng.integers(0, 2**32, size=(R, pk), dtype=np.uint32)
+    rsel = rng.permutation(R).astype(np.int32)
+    idx = rng.integers(0, P, size=(R, m)).astype(np.int32)
+    mask = rng.integers(0, 2, size=(R, m)).astype(bool)
+    got = xor_decode_gather(jnp.asarray(recv), jnp.asarray(chunks),
+                            jnp.asarray(rsel), jnp.asarray(idx),
+                            jnp.asarray(mask), block=256)
+    want = ref.xor_decode_gather_ref(jnp.asarray(recv), jnp.asarray(chunks),
+                                     jnp.asarray(rsel), jnp.asarray(idx),
+                                     jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_codec_roundtrip():
+    """Fused encode then fused decode recovers the excluded packet:
+    Δ = XOR of all m sources; cancelling m-1 of them leaves one."""
+    rng = np.random.default_rng(7)
+    P, pk, n, m = 30, 96, 5, 4
+    chunks = rng.integers(0, 2**32, size=(P, pk), dtype=np.uint32)
+    # distinct sources per row so the rows are invertible
+    idx = np.stack([rng.choice(P, size=m, replace=False)
+                    for _ in range(n)]).astype(np.int32)
+    full = np.ones((n, m), dtype=bool)
+    delta = xor_encode_gather(jnp.asarray(chunks), jnp.asarray(idx),
+                              jnp.asarray(full), block=256)
+    canc = full.copy()
+    canc[:, 0] = False                          # cancel all but source 0
+    rsel = np.arange(n, dtype=np.int32)
+    got = xor_decode_gather(delta, jnp.asarray(chunks), jnp.asarray(rsel),
+                            jnp.asarray(idx), jnp.asarray(canc), block=256)
+    np.testing.assert_array_equal(np.asarray(got), chunks[idx[:, 0]])
+
+
+def test_gather_codec_masked_zero_index():
+    """Masked-off entries are AND-killed even when their baked index
+    aliases a real row (the lowering bakes 0 for invalid sources)."""
+    rng = np.random.default_rng(8)
+    chunks = rng.integers(0, 2**32, size=(6, 40), dtype=np.uint32)
+    idx = np.zeros((3, 4), dtype=np.int32)      # all alias row 0
+    mask = np.zeros((3, 4), dtype=bool)
+    got = xor_encode_gather(jnp.asarray(chunks), jnp.asarray(idx),
+                            jnp.asarray(mask), block=256)
+    np.testing.assert_array_equal(np.asarray(got), 0)
+
+
+def test_gather_codec_rejects_bad_shapes():
+    chunks = jnp.zeros((4, 8), jnp.uint32)
+    with pytest.raises(TypeError):
+        xor_encode_gather(chunks.astype(jnp.int32),
+                          jnp.zeros((2, 2), jnp.int32),
+                          jnp.ones((2, 2), bool))
+    with pytest.raises(ValueError):
+        xor_encode_gather(chunks, jnp.zeros((2, 2), jnp.int32),
+                          jnp.ones((2, 3), bool))
+    with pytest.raises(ValueError):
+        xor_decode_gather(jnp.zeros((2, 8), jnp.uint32), chunks,
+                          jnp.zeros((3,), jnp.int32),
+                          jnp.zeros((2, 2), jnp.int32),
+                          jnp.ones((2, 2), bool))
 
 
 # --------------------------------------------------------------------- #
