@@ -1,0 +1,172 @@
+"""SPMD vs interpreter gradient sync — the training hot loop's wire.
+
+Acceptance numbers for the device-resident training path (DESIGN.md
+§11): one grad-sync step moves the stacked per-worker contribution
+tensor ``[K, J_own, k-1, K, d]`` to the fully-aggregated per-worker
+shards ``[K, J, d]``. Two executors of the SAME compiled schedule:
+
+* interpreter — :class:`repro.core.engine.CAMREngine` (map over
+  pre-computed gradients + 3-stage coded shuffle + reduce, byte-exact
+  accounting), what ``MultiModelCAMRTrainer(mode="camr")`` runs;
+* spmd — :meth:`repro.core.collective.ShuffleStream.sync` (ONE jitted
+  shard_map execution, fused gather-XOR codec, executor reused across
+  steps), what ``mode="camr_spmd"`` runs.
+
+Outputs are verified BIT-identical before any time is reported (the
+canonical combine order makes the two executors exactly equal, not
+allclose). The SPMD path must win on every config — a hard gate under
+``CAMR_BENCH_STRICT=1`` (CPU host-device meshes are noisy; compiled
+TPU lanes should see far more than the 5x target).
+
+    PYTHONPATH=src python -m benchmarks.bench_train [--smoke]
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=16")
+# ^ before any jax import.
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.compat import make_mesh
+from repro.core.collective import (ShuffleStream, make_plan,
+                                   scatter_contributions)
+from repro.core.engine import CAMRConfig, CAMREngine
+
+# (q, k, d) — d = the per-worker function-shard width being synced
+CONFIGS = [(2, 3, 256), (3, 3, 128), (2, 4, 96), (3, 4, 96), (5, 3, 64)]
+SMOKE_CONFIGS = [(2, 3, 16)]
+TARGET_SPEEDUP = 5.0
+
+
+def _median(fn, reps: int) -> float:
+    fn()  # warm-up (compile / caches)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def bench_config(q: int, k: int, d: int, reps: int) -> dict:
+    plan = make_plan(q, k, d)
+    K, J = plan.K, plan.J
+    rng = np.random.default_rng(0)
+    bg = rng.standard_normal((J, k, K, d)).astype(np.float32)
+    datasets = [[bg[j, t] for t in range(k)] for j in range(J)]
+    contribs = scatter_contributions(plan, bg)
+
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    eng = CAMREngine(cfg, lambda job, sf: sf)
+
+    def interp_sync():
+        eng.reset()
+        return eng.run(datasets)
+
+    mesh = make_mesh((K,), ("camr",))
+    stream = ShuffleStream(q, k, d, mesh=mesh)
+
+    def spmd_sync():
+        return jax.block_until_ready(stream.sync(contribs))
+
+    # -- bit-identity gate BEFORE any timing ---------------------------- #
+    results = interp_sync()
+    want = np.empty((K, J, d), np.float32)
+    for s in range(K):
+        for j in range(J):
+            want[s, j] = results[s][(j, s)]
+    np.testing.assert_array_equal(
+        np.asarray(spmd_sync()), want,
+        err_msg=f"spmd grad-sync != engine interpreter (q={q} k={k})")
+
+    t_interp = _median(interp_sync, reps)
+    t_spmd = _median(spmd_sync, reps)
+    return dict(
+        name=f"train_sync_q{q}_k{k}_d{d}",
+        config={"q": q, "k": k, "K": K, "J": J, "d": d},
+        interp_us=t_interp * 1e6, spmd_us=t_spmd * 1e6,
+        speedup=t_interp / t_spmd,
+        sync_bytes=int(contribs.nbytes),
+    )
+
+
+def _bench_rows(smoke: bool, reps: int) -> list:
+    rows, losers = [], []
+    for q, k, d in (SMOKE_CONFIGS if smoke else CONFIGS):
+        r = bench_config(q, k, d, reps)
+        if r["speedup"] <= 1.0:
+            losers.append(r["name"])
+        rows.append({
+            "name": r["name"],
+            "us_per_call": r["spmd_us"],
+            "derived": (f"interp={r['interp_us']:.0f}us "
+                        f"spmd={r['spmd_us']:.0f}us "
+                        f"speedup={r['speedup']:.1f}x "
+                        f"(target {TARGET_SPEEDUP:.0f}x) bit-identical"),
+            "config": r["config"],
+            "median_us": r["spmd_us"],
+            "interp_median_us": r["interp_us"],
+            "speedup": r["speedup"],
+        })
+    if losers:
+        msg = ("SPMD grad-sync must beat the interpreter on every "
+               f"config; lost on {losers}")
+        if os.environ.get("CAMR_BENCH_STRICT") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING (noisy host?): {msg}", file=sys.stderr)
+    return rows
+
+
+def rows(smoke: bool | None = None):
+    """Suite entry point for benchmarks/run.py.
+
+    If another suite already initialized the jax backend (the XLA_FLAGS
+    device-count hack above only works before the first jax use),
+    re-run in a fresh subprocess and relay the CSV rows.
+    """
+    if smoke is None:
+        smoke = os.environ.get("CAMR_BENCH_SMOKE", "") == "1"
+    need = max(q * k for q, k, _ in (SMOKE_CONFIGS if smoke else CONFIGS))
+    if len(jax.devices()) >= need:
+        return _bench_rows(smoke, reps=5 if smoke else 15)
+    import csv
+    import io
+    import subprocess
+    cmd = [sys.executable, "-m", "benchmarks.bench_train"]
+    if smoke:
+        cmd.append("--smoke")
+    res = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                         env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    if res.returncode != 0:
+        raise RuntimeError(f"subprocess bench failed: {res.stderr[-500:]}")
+    reader = csv.DictReader(io.StringIO(res.stdout))
+    return [{"name": r["name"], "us_per_call": float(r["us_per_call"]),
+             "derived": r["derived"]} for r in reader]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config, few reps (CI train-smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in _bench_rows(args.smoke, reps=5 if args.smoke else 15):
+        print(f"{row['name']},{row['us_per_call']:.1f},"
+              f"\"{row['derived']}\"", flush=True)
+    print("# spmd grad-sync verified bit-identical to the engine "
+          "interpreter before timing", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

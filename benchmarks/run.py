@@ -13,6 +13,7 @@ Tables:
   collective — TPU p2p byte model, CAMR vs ring psum
   schedule   — ShuffleProgram lowering + batched-vs-looped shuffle time
   jobstream  — pipelined multi-wave stream vs serial engine loop (§9)
+  train      — SPMD vs interpreter gradient sync (training path, §11)
   roofline   — §Roofline summary from the dry-run artifacts (if present)
 
 ``--json PATH`` additionally writes machine-readable results: every row
@@ -66,6 +67,8 @@ SUITES = {
                                    fromlist=["rows"]).rows(),
     "jobstream": lambda: __import__("benchmarks.bench_jobstream",
                                     fromlist=["rows"]).rows(),
+    "train": lambda: __import__("benchmarks.bench_train",
+                                fromlist=["rows"]).rows(),
     "roofline": _roofline_rows,
 }
 

@@ -1,13 +1,28 @@
 """The paper's deep-learning use case (§I): train J models simultaneously
-with the CAMR-coded gradient shuffle, vs the uncoded baseline.
+with the CAMR-coded gradient shuffle — on the SPMD fused-codec
+collective, the numpy engine interpreter, and the uncoded baseline.
 
-J = q^{k-1} = 4 small LMs on K = 6 simulated workers. Each worker maps
-the microbatches it stores (redundancy k-1 = 2), aggregates per-batch
-gradients (the compression step), and the 3-stage coded shuffle delivers
-every worker the summed shard it reduces. Identical losses, fewer bytes.
+J = q^{k-1} = 4 small LMs on K = 6 workers. Each worker maps the
+microbatches it stores (redundancy k-1 = 2), compresses per-batch
+gradients with the α-combiner (the paper's aggregation step), and the
+3-stage coded shuffle delivers every worker the summed shard it
+reduces. All three wires produce BIT-identical parameters and losses
+(asserted below — the engine is the bit-identity oracle of the device
+path); the coded shuffle just ships fewer bytes, and the SPMD path
+runs it as one jitted shard_map program reused across steps.
 
     PYTHONPATH=src python examples/multimodel_camr.py --steps 3
+    PYTHONPATH=src python examples/multimodel_camr.py --steps 3 \
+        --modes camr,camr_spmd          # parity: device vs interpreter
 """
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=6")
+# ^ before any jax import: mode="camr_spmd" needs a K=6-device mesh.
 
 import argparse
 
@@ -22,29 +37,49 @@ from repro.runtime.train_loop import MultiModelCAMRTrainer
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--modes", default="camr,uncoded,camr_spmd",
+                    help="comma-separated grad-sync modes to run and "
+                         "compare (first one is the reference)")
     args = ap.parse_args()
+    modes = args.modes.split(",")
 
     cfg = reduced(get_config("granite_3_2b")).replace(
         n_layers=2, vocab=256, d_model=64, d_ff=128, loss_chunk=16)
     pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=16,
                                 global_batch=4, structure=0.9)
 
-    reports = {}
-    for mode in ("camr", "uncoded"):
-        tr = MultiModelCAMRTrainer(cfg, q=2, k=3, lr=1e-3, seed=0)
+    reports, trainers = {}, {}
+    for mode in modes:
+        tr = MultiModelCAMRTrainer(cfg, q=2, k=3, lr=1e-3, seed=0,
+                                   spmd_oracle=(mode == "camr_spmd"))
         reports[mode] = tr.train_steps(pipe, args.steps, mode=mode)
-        print(f"{mode:8s}: bytes/run={reports[mode].bytes_total:,} "
+        trainers[mode] = tr
+        extra = (f" sync={reports[mode].sync}" if reports[mode].sync
+                 else "")
+        print(f"{mode:9s}: bytes/run={reports[mode].bytes_total:,} "
               f"L={reports[mode].loads.get('L_total_bus', 0):.4f} "
-              f"final losses={np.round(reports[mode].losses[-1], 4)}")
+              f"final losses={np.round(reports[mode].losses[-1], 4)}"
+              f"{extra}")
 
-    camr, unc = reports["camr"], reports["uncoded"]
-    np.testing.assert_allclose(np.array(camr.losses),
-                               np.array(unc.losses), rtol=1e-4)
-    print(f"\nloss trajectories IDENTICAL; coded shuffle shipped "
-          f"{1 - camr.bytes_total / unc.bytes_total:.1%} fewer bytes "
-          f"(analytic: 1 - {loads.camr_load(2, 3):.2f}/"
-          f"{loads.uncoded_aggregated_load(2, 3):.2f} = "
-          f"{1 - loads.camr_load(2, 3) / loads.uncoded_aggregated_load(2, 3):.1%})")
+    ref = modes[0]
+    for mode in modes[1:]:
+        np.testing.assert_array_equal(
+            np.asarray(trainers[mode].flat),
+            np.asarray(trainers[ref].flat),
+            err_msg=f"{mode} parameters diverged from {ref}")
+        np.testing.assert_array_equal(
+            np.asarray(reports[mode].losses),
+            np.asarray(reports[ref].losses),
+            err_msg=f"{mode} losses diverged from {ref}")
+    print(f"\n{' vs '.join(modes)}: parameters and losses BIT-IDENTICAL")
+
+    if "camr" in reports and "uncoded" in reports:
+        camr, unc = reports["camr"], reports["uncoded"]
+        print(f"coded shuffle shipped "
+              f"{1 - camr.bytes_total / unc.bytes_total:.1%} fewer bytes "
+              f"(analytic: 1 - {loads.camr_load(2, 3):.2f}/"
+              f"{loads.uncoded_aggregated_load(2, 3):.2f} = "
+              f"{1 - loads.camr_load(2, 3) / loads.uncoded_aggregated_load(2, 3):.1%})")
     print("OK")
 
 

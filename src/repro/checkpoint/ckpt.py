@@ -101,12 +101,20 @@ def load_checkpoint(path: str, tree_like, *, step: int | None = None,
     return restored, man["metadata"] | {"step": man["step"]}
 
 
+def _is_tmp_dir(name: str) -> bool:
+    """In-progress/orphaned write dirs: ``step_XXXXXXXX.tmp.<pid>``."""
+    return name.startswith("step_") and ".tmp." in name
+
+
 def available_steps(path: str) -> list[int]:
     if not os.path.isdir(path):
         return []
     out = []
     for n in os.listdir(path):
-        if n.startswith("step_") and not n.endswith("tmp"):
+        # skip tmp dirs EXPLICITLY — previously they were only excluded
+        # because int("...tmp.<pid>") happens to raise ValueError, which
+        # also silently hid genuinely malformed step dirs
+        if n.startswith("step_") and not _is_tmp_dir(n):
             try:
                 out.append(int(n.split("_")[1]))
             except (IndexError, ValueError):
@@ -148,11 +156,42 @@ class CheckpointManager:
             finally:
                 self._q.task_done()
 
+    #: a foreign step_*.tmp.<pid> dir younger than this is presumed to
+    #: be another writer mid-save and is never reaped
+    STALE_TMP_SECS = 3600.0
+
     def _gc(self):
         steps = available_steps(self.path)
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
                           ignore_errors=True)
+        # crashed saves leave step_*.tmp.<pid> dirs behind forever —
+        # reap the stale ones. Conservative by construction: never our
+        # own pid (this manager's writes are serialized on one worker
+        # thread, so ours cannot be mid-write here), never a live local
+        # writer's, and never anything younger than STALE_TMP_SECS —
+        # pids do not compare across hosts, so for another host's
+        # writer age is the only safe signal.
+        if not os.path.isdir(self.path):
+            return
+        now = time.time()
+        for n in os.listdir(self.path):
+            if not _is_tmp_dir(n):
+                continue
+            pid = n.rsplit(".", 1)[-1]
+            if not pid.isdigit() or int(pid) == os.getpid():
+                continue
+            path = os.path.join(self.path, n)
+            try:
+                if now - os.path.getmtime(path) < self.STALE_TMP_SECS:
+                    continue              # possibly mid-write elsewhere
+                os.kill(int(pid), 0)      # raises if no such local pid
+                continue                  # live local writer — keep
+            except ProcessLookupError:
+                pass                      # dead locally AND stale: reap
+            except (PermissionError, OSError):
+                continue                  # exists but not ours — keep
+            shutil.rmtree(path, ignore_errors=True)
 
     def save(self, tree, *, step: int, metadata: dict | None = None):
         if self._err:

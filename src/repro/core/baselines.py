@@ -63,9 +63,12 @@ class UncodedAggregatedEngine:
                 agg[s][(job, t)] = a
         self._value_bytes = a[0].nbytes
 
+        # Same canonical combine order as CAMREngine.reduce_phase
+        # (delivered batch + ascending fold of the other k-1): coded and
+        # uncoded runs over the same map outputs are BITWISE equal —
+        # same math, different wires.
         results = [dict() for _ in range(K)]
         for j in range(d.J):
-            owners = d.owners[j]
             for s in range(K):
                 if d.is_owner(s, j):
                     # one unicast: any holder of the missing batch sends it
@@ -75,14 +78,18 @@ class UncodedAggregatedEngine:
                     self.trace.add(Transmission(
                         stage=1, sender=h, receivers=(s,),
                         payload=payload.tobytes(), tag=("job", j)))
-                    acc = payload.copy()
+                    rest = None
                     for t in range(d.k):
                         if t != tmiss:
-                            acc = self.combine(acc, agg[s][(j, t)][s])
+                            v = agg[s][(j, t)][s]
+                            rest = v if rest is None else self.combine(rest, v)
+                    acc = self.combine(payload.copy(), rest)
                 else:
-                    # two unicasts: owner u1 sends its k-1 stored batches
-                    # combined; owner u2 sends u1's missing batch.
-                    u1 = owners[0]
+                    # two unicasts: the owner u1 in s's parallel class sends
+                    # its k-1 stored batches combined; u2 sends u1's missing
+                    # batch (mirrors the CAMR stage-2/3 pair).
+                    (u1,) = [u for u in d.owners[j]
+                             if d.class_of(u) == d.class_of(s)]
                     t1 = pl.batch_of_label(j, u1)
                     acc1 = None
                     for t in range(d.k):
@@ -95,7 +102,7 @@ class UncodedAggregatedEngine:
                         self.trace.add(Transmission(
                             stage=3, sender=u, receivers=(s,),
                             payload=payload.tobytes(), tag=("job", j)))
-                    acc = self.combine(acc1, part2)
+                    acc = self.combine(part2, acc1)
                 results[s][(j, s)] = acc
         return results
 

@@ -367,6 +367,12 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     ``codec="fused"`` (default) runs the single-pass gather-XOR codec
     over the schedule's flat index tables; ``codec="multipass"`` is the
     original multi-pass pipeline, kept as the oracle (DESIGN.md §10).
+
+    Per-device outputs are BITWISE equal to the numpy engine's reduce
+    results for the same contributions: XOR delivery is lossless and
+    the assembly folds batch aggregates in the engine's canonical
+    combine order (DESIGN.md §11) — the contract the training path's
+    cross-mode parameter identity rests on.
     """
     prog = plan.program
     q, k, K, J, J_own, d = (plan.q, plan.k, plan.K, plan.J, plan.J_own,
@@ -405,23 +411,36 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     stage1_val = stage_vals[1]   # [J, d]; row j valid where I own job j
     stage2_val = stage_vals[2]   # [n_s2, d]; rows at my s2_ord ordinals
 
+    # sequential ascending left fold over the stored-batch axis — the
+    # canonical combine order of CAMREngine.reduce_phase (stored_batches
+    # rows are ascending), so the SPMD output is BITWISE equal to the
+    # engine's, not merely allclose (a plain .sum() would let XLA pick
+    # its own reduction tree).
+    def _fold_stored(x):                                    # [J_own, k-1, d]
+        acc = x[:, 0]
+        for b in range(1, k - 1):
+            acc = acc + x[:, b]
+        return acc                                          # [J_own, d]
+
     # ========== stage 3: intra-class unicasts (q-1 full ppermutes) ===== #
     cls_base = (me // q) * q
     s3_out = jnp.zeros((q - 1, J_own, d), dtype=dtype)
     for o in range(1, q):
         dst = cls_base + (me % q + o) % q
-        pay = jnp.take(contribs, dst, axis=2).sum(axis=1)   # [J_own, d]
+        pay = _fold_stored(jnp.take(contribs, dst, axis=2))  # [J_own, d]
         got = lax.ppermute(pay, axis_name, perm=list(prog.s3_perms[o - 1]))
         s3_out = s3_out.at[o - 1].set(got)
 
     # ========== assemble (reduce-side tables of the program) ========== #
-    own_sum = jnp.take(contribs, me, axis=2).sum(axis=1)    # [J_own, d]
+    # value = delivered batch + fold of the other k-1 (owners fold their
+    # own aggregates; non-owners get the sender-side fold via stage 3)
+    own_sum = _fold_stored(jnp.take(contribs, me, axis=2))  # [J_own, d]
     d_isown = dev(prog.is_own)
     d_slot = dev(prog.own_slot)
     d_s2 = dev(prog.s2_ord)
     d_s3 = dev(prog.s3_off)
 
-    owner_val = own_sum[d_slot] + stage1_val      # [J, d]
+    owner_val = stage1_val + own_sum[d_slot]      # [J, d]
     s2_sel = stage2_val[d_s2]
     s3_sel = s3_out[d_s3, d_slot]
     nonowner_val = s2_sel + s3_sel
@@ -552,6 +571,8 @@ class ShuffleStream:
         self._pending: list = []               # waves awaiting dispatch
         self._in_flight: deque = deque()       # (device out, W)
         self._done: list = []                  # host [K, J, d] outputs
+        self.dispatches = 0                    # program executions issued
+        self.compiles = 0                      # executors traced (per W)
 
     # -- compiled executor per stack width ------------------------------ #
     def _fn(self, W: int):
@@ -570,16 +591,13 @@ class ShuffleStream:
                                     codec=self.codec,
                                     use_kernels=self.use_kernels)[None]
 
+            self.compiles += 1
             self._jitted[W] = jax.jit(shard_map(
                 body, mesh=self.mesh, in_specs=P(self.axis_name),
                 out_specs=P(self.axis_name)))
         return self._jitted[W]
 
-    # -- streaming ------------------------------------------------------ #
-    def submit(self, contribs) -> None:
-        """Queue one wave ``[K, J_own, k-1, K, d]``; dispatches as soon
-        as ``wave_batch`` waves are pending. Never blocks on compute
-        unless the double buffer is full."""
+    def _check_wave(self, contribs) -> None:
         shape = (self.K, self.q ** (self.k - 2), self.k - 1, self.K,
                  self.d)
         if tuple(np.shape(contribs)) != shape:
@@ -592,9 +610,35 @@ class ShuffleStream:
         dtype = getattr(contribs, "dtype", None)
         if dtype is not None:
             check_codec_dtype(dtype, "ShuffleStream")
+
+    # -- streaming ------------------------------------------------------ #
+    def submit(self, contribs) -> None:
+        """Queue one wave ``[K, J_own, k-1, K, d]``; dispatches as soon
+        as ``wave_batch`` waves are pending. Never blocks on compute
+        unless the double buffer is full."""
+        self._check_wave(contribs)
         self._pending.append(contribs)
         if len(self._pending) >= self.wave_batch:
             self._dispatch()
+
+    # -- multi-step reuse (training grad-sync path) --------------------- #
+    def sync(self, contribs):
+        """Run ONE wave through the stream's compiled executor and
+        return the ``[K, J, d]`` **device** output (async dispatch, no
+        host copy) — the training grad-sync path: one lowered plan and
+        one compiled executor reused across every step, with the output
+        left on the mesh for the device-resident optimizer update
+        (DESIGN.md §11). Independent of the submit/drain double buffer.
+        """
+        self._check_wave(contribs)
+        self.dispatches += 1
+        return self._fn(1)(contribs)
+
+    def stats(self) -> dict:
+        """Executor-reuse counters (``compiles`` stays flat while
+        ``dispatches`` grows on a steady-state stream)."""
+        return dict(dispatches=self.dispatches, compiles=self.compiles,
+                    widths=sorted(self._jitted))
 
     def _dispatch(self) -> None:
         waves, self._pending = self._pending, []
@@ -604,6 +648,7 @@ class ShuffleStream:
                else np.concatenate([np.asarray(w) for w in waves],
                                    axis=-1))
         out = self._fn(len(waves))(buf)        # async: returns immediately
+        self.dispatches += 1
         self._in_flight.append((out, len(waves)))
         while len(self._in_flight) > self.depth:
             self._collect_oldest()

@@ -264,6 +264,12 @@ class CAMREngine:
             self.servers[rcv].recv_rest[(job, qf)] = self._de(payload)
 
     def reduce_phase(self) -> list[dict[tuple[int, int], np.ndarray]]:
+        # Canonical combine order (the bit-identity contract every
+        # executor of the schedule honors — collective.py, baselines.py,
+        # fault.py): value = delivered_batch + fold_asc(other k-1
+        # batches), where fold_asc is a sequential left fold in
+        # ascending batch order. With a deterministic combiner this
+        # makes all executors BITWISE equal, not merely allclose.
         pl, d = self.placement, self.design
         results: list[dict[tuple[int, int], np.ndarray]] = []
         for s in range(d.K):
@@ -273,13 +279,18 @@ class CAMREngine:
                 for j in range(d.J):
                     if d.is_owner(s, j):
                         tmiss = pl.batch_of_label(j, s)
-                        acc = st.recv_batch[(j, tmiss, qf)]
+                        rest = None
                         for t in range(d.k):
                             if t != tmiss:
-                                acc = self.combine(acc, st.agg[(j, t)][qf])
+                                v = st.agg[(j, t)][qf]
+                                rest = v if rest is None \
+                                    else self.combine(rest, v)
+                        acc = self.combine(st.recv_batch[(j, tmiss, qf)],
+                                           rest)
                     else:
                         # stage-2 value covers the class-mate owner's missing
-                        # batch; stage-3 value covers the other k-1 batches.
+                        # batch; stage-3 value covers the other k-1 batches
+                        # (already an ascending fold at the sender).
                         cls = d.class_of(s)
                         (l,) = [u for u in d.owners[j]
                                 if d.class_of(u) == cls]

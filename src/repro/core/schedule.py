@@ -608,20 +608,27 @@ def lower_degraded(program: ShuffleProgram,
                 s3.append((holder, rcv, j, m, (t,)))
     # migration fill: the takeover of failed f additionally needs, per
     # job f OWNED, the aggregate of the k-1 batches f held locally.
+    # Sends are ordered so the receiver's sequential combine reproduces
+    # the healthy ascending batch fold bit-for-bit (engine.reduce_phase
+    # canonical order): l1 stores everything except its own label batch
+    # t1, so the prefix below t1 goes combined, t1 comes from another
+    # live holder, and the suffix above t1 goes one batch per send.
     for f in sorted(failed):
         s = int(migrate[f])
         for j in design.owned_jobs(f):
             tf = pl.batch_of_label(j, f)
             rest = [t for t in range(k) if t != tf]
             l1 = next(u for u in design.owners[j] if u not in failed)
-            t1 = pl.batch_of_label(j, l1)
-            part = tuple(t for t in rest if t != t1)
-            if part:
-                s3.append((l1, s, j, f, part))
-            if t1 in rest:
-                h2 = next(h for h in pl.holders(j, t1)
-                          if h not in failed)
-                s3.append((h2, s, j, f, (t1,)))
+            t1 = pl.batch_of_label(j, l1)   # != tf: labels are a bijection
+            prefix = tuple(t for t in rest if t < t1)
+            if prefix:
+                s3.append((l1, s, j, f, prefix))
+            h2 = next(h for h in pl.holders(j, t1)
+                      if h not in failed)
+            s3.append((h2, s, j, f, (t1,)))
+            for t in rest:
+                if t > t1:
+                    s3.append((l1, s, j, f, (t,)))
 
     return DegradedProgram(
         base=program, failed=failed, migrate=migrate,

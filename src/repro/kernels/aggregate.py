@@ -48,12 +48,20 @@ def _agg_kernel(v_ref, ids_ref, o_ref, *, num_segments: int,
                                     "interpret"))
 def aggregate(values: jnp.ndarray, segment_ids: jnp.ndarray,
               num_segments: int, *, block_n: int = _BLOCK_N,
-              block_d: int = _BLOCK_D, interpret: bool = True
+              block_d: int = _BLOCK_D, interpret: bool | None = None
               ) -> jnp.ndarray:
     """Segment-sum ``values: [n, d]`` by ``segment_ids: [n] -> [S, d]``.
 
     Out-of-range ids (used for padding) contribute nothing.
+    ``interpret=None`` compiles the kernel on TPU backends and falls
+    back to Pallas interpret mode elsewhere (same policy as the codec
+    kernels). When every segment holds exactly one row (the trainer's
+    gamma=1 map lane) the one-hot matmul is an exact gather — adding
+    0-products cannot perturb finite f32 values — so the combiner is
+    bit-transparent there.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, d = values.shape
     n_pad = -(-n // block_n) * block_n
     d_pad = -(-d // block_d) * block_d

@@ -5,6 +5,17 @@ initializes from the TPU environment); on CPU it runs a reduced config.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
         --steps 100 --reduced --ckpt-dir /tmp/ckpt
+
+``--multi-model`` switches to the paper's J = q^{k-1}-models setting
+(:class:`repro.runtime.MultiModelCAMRTrainer`): ``--grad-sync camr``
+runs the numpy-engine interpreter, ``camr_spmd`` the device-resident
+SPMD fused-codec shuffle (needs a K = q*k device mesh — on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=K``), ``uncoded``
+the unicast baseline. All three produce bit-identical parameters.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
+        --reduced --multi-model --q 2 --k 3 --grad-sync camr_spmd \
+        --steps 3
 """
 
 from __future__ import annotations
@@ -17,7 +28,29 @@ import jax
 
 from repro.configs import ARCHS, SHAPES, get_config, reduced
 from repro.data.pipeline import ShardedTokenPipeline
-from repro.runtime import Trainer
+from repro.runtime import MultiModelCAMRTrainer, Trainer
+
+
+def _run_multi_model(cfg, args) -> None:
+    if args.grad_sync == "allreduce":
+        raise SystemExit("--multi-model needs --grad-sync "
+                         "camr|camr_spmd|uncoded (allreduce is the "
+                         "single-model data-parallel wire)")
+    pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
+                                global_batch=args.batch)
+    failed = ({int(s) for s in args.failed.split(",")}
+              if args.failed else None)
+    tr = MultiModelCAMRTrainer(cfg, q=args.q, k=args.k, lr=args.lr,
+                               failed=failed)
+    t0 = time.time()
+    rep = tr.train_steps(pipe, args.steps, mode=args.grad_sync)
+    dt = time.time() - t0
+    for step, losses in enumerate(rep.losses):
+        print(json.dumps({"step": step + 1, "losses": losses}))
+    print(json.dumps({"mode": rep.mode, "bytes_total": rep.bytes_total,
+                      "loads": rep.loads, "sync": rep.sync}))
+    print(f"# {args.steps} steps x {tr.camr.J} models in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
 
 
 def main():
@@ -32,8 +65,17 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--grad-sync", choices=["allreduce", "camr"],
+    ap.add_argument("--grad-sync",
+                    choices=["allreduce", "camr", "camr_spmd", "uncoded"],
                     default="allreduce")
+    ap.add_argument("--multi-model", action="store_true",
+                    help="train J = q^(k-1) models with CAMR-coded "
+                         "gradient aggregation")
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--failed", default=None,
+                    help="comma-separated failed worker ids (degraded "
+                         "survivor-set schedule; --grad-sync camr only)")
     args = ap.parse_args()
 
     if jax.process_count() > 1:  # multi-host pod
@@ -42,6 +84,13 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.multi_model:
+        _run_multi_model(cfg, args)
+        return
+    if args.grad_sync in ("camr_spmd", "uncoded"):
+        raise SystemExit(f"--grad-sync {args.grad_sync} is a "
+                         "--multi-model wire; the single-model loop "
+                         "takes allreduce|camr")
     cfg = cfg.replace(grad_sync=args.grad_sync)
     pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
                                 global_batch=args.batch)

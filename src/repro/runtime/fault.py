@@ -139,11 +139,17 @@ class DegradedCAMREngine(CAMREngine):
                         acc = self.combine(st.recv_batch[(j, tl, qf)],
                                            st.recv_rest[(j, qf)])
                     elif d.is_owner(s, j):
+                        # canonical order (engine.reduce_phase): delivered
+                        # batch + ascending fold of the k-1 stored ones
                         tmiss = pl.batch_of_label(j, s)
-                        acc = st.recv_batch[(j, tmiss, qf)]
+                        rest = None
                         for t in range(d.k):
                             if t != tmiss:
-                                acc = self.combine(acc, st.agg[(j, t)][qf])
+                                v = st.agg[(j, t)][qf]
+                                rest = v if rest is None \
+                                    else self.combine(rest, v)
+                        acc = self.combine(st.recv_batch[(j, tmiss, qf)],
+                                           rest)
                     else:
                         cls = d.class_of(s)
                         (l,) = [u for u in d.owners[j]

@@ -144,6 +144,10 @@ class JobStream:
         self.wave_batch = wave_batch
         self.pipeline = pipeline
         self.last_report: StreamReport | None = None
+        #: engines of the last run, one per batch in completion order —
+        #: byte accounting (``.trace``) and degraded-mode migration
+        #: (``.migrate_target``) for callers like the training loop.
+        self.last_engines: list = []
 
     # ------------------------------------------------------------------ #
     # batching plan
@@ -247,6 +251,7 @@ class JobStream:
         (each exactly what :meth:`CAMREngine.run` returns for that
         wave — bit-identical to the serial oracle)."""
         specs = list(specs)
+        self.last_engines = []
         if not specs:
             self.last_report = StreamReport(
                 waves=0, batches=0, cache_hits=0, cache_misses=0,
@@ -269,6 +274,7 @@ class JobStream:
             split = self._split_results(res, widths)
             for w, spec_idx in enumerate(idxs):
                 results[spec_idx] = split[w]
+            self.last_engines.append(eng)
 
         pipelined = self.pipeline and len(batches) > 1
         if pipelined:

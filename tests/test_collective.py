@@ -75,9 +75,10 @@ _RUN = textwrap.dedent("""
 """)
 
 # seeded regression pinned to the ENGINE oracle: the SPMD collective and
-# the numpy interpreter execute the same ShuffleProgram, so their outputs
-# must agree exactly (both are exact integer-free f32 sums of the same
-# addends in the same order-insensitive reduction tree up to fp assoc).
+# the numpy interpreter execute the same ShuffleProgram in the same
+# canonical combine order (delivered batch + ascending fold), so their
+# per-device outputs must be BITWISE equal — the contract the training
+# integration's cross-mode parameter identity rests on (DESIGN.md §11).
 _RUN_ENGINE = textwrap.dedent("""
     import numpy as np, jax
     from jax.sharding import PartitionSpec as P
@@ -105,8 +106,8 @@ _RUN_ENGINE = textwrap.dedent("""
     out = np.asarray(f(contribs))
     for s in range(K):
         for j in range(plan.J):
-            np.testing.assert_allclose(
-                out[s, j], results[s][(j, s)], rtol=2e-5, atol=2e-6,
+            np.testing.assert_array_equal(
+                out[s, j], results[s][(j, s)],
                 err_msg=f'device {{s}} job {{j}}')
     print('OK')
 """)
@@ -150,6 +151,16 @@ _RUN_STREAM = textwrap.dedent("""
     outs = stream.drain()
     for out, ser in zip(outs, serial):
         np.testing.assert_array_equal(out, ser)
+    # sync(): the multi-step training path — one compiled executor
+    # reused across calls, device-resident output, bit-identical to
+    # the per-wave dispatch
+    stream = ShuffleStream(q, k, d, mesh=mesh)
+    for c, ser in zip(contribs, serial):
+        got = stream.sync(c)
+        assert isinstance(got, jax.Array)
+        np.testing.assert_array_equal(np.asarray(got), ser)
+    st = stream.stats()
+    assert st['dispatches'] == len(contribs) and st['compiles'] == 1, st
     print('OK')
 """)
 
