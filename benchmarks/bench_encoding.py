@@ -23,9 +23,17 @@ interleaved A/B so drift cannot bias one codec.
     PYTHONPATH=src python -m benchmarks.bench_encoding           # full
     PYTHONPATH=src python -m benchmarks.bench_encoding --smoke   # CI
 
+Part 3 (packed 16-bit lane, DESIGN.md §12): bf16-vs-f32 rows for the
+same element payload. The bytes-on-wire gate is analytic and ALWAYS
+hard — the packed lane must ship ≤ 0.55x the f32 bytes — and the
+wall-clock must-not-lose gate is hard under ``CAMR_BENCH_STRICT=1``
+(half the XOR words; the pack is a bitcast). Rows carry
+``payload_dtype`` and ``bytes_on_wire`` for the --json artifact.
+
 ``--smoke`` shrinks the configs and skips the speed gate but ALSO
-pushes the fused path through the Pallas kernels in interpret mode, so
-CI exercises the kernel code paths bit-exactly on every commit.
+pushes the fused path through the Pallas kernels in interpret mode
+(u32 AND u16 packed variants), so CI exercises the kernel code paths
+bit-exactly on every commit.
 """
 
 import argparse
@@ -120,7 +128,8 @@ def codec_rows(configs=None, repeats: int = 30, smoke: bool = False):
     import jax.numpy as jnp
 
     from repro.core.collective import (_decode_stage, _encode_stage,
-                                       _resolve_kernels, make_plan)
+                                       _resolve_kernels,
+                                       camr_collective_bytes, make_plan)
 
     configs = configs if configs is not None else (
         SMOKE_CONFIGS if smoke else CODEC_CONFIGS)
@@ -193,6 +202,8 @@ def codec_rows(configs=None, repeats: int = 30, smoke: bool = False):
             "config": {"q": q, "k": k, "pk": pk, "d": d,
                        "backend": jax.default_backend(),
                        "pallas_kernels": bool(use_kernels)},
+            "payload_dtype": "uint32",
+            "bytes_on_wire": camr_collective_bytes(plan)["camr_total"],
             "median_us": t_f["median_us"],
             "p10_us": t_f["p10_us"],
             "p90_us": t_f["p90_us"],
@@ -214,13 +225,154 @@ def codec_rows(configs=None, repeats: int = 30, smoke: bool = False):
     return rows
 
 
+# --------------------------------------------------------------------- #
+# packed 16-bit lane vs f32 (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+#: the packed lane must move at most this fraction of the f32 lane's
+#: bytes-on-wire for the same element payload (0.5 + pad headroom) —
+#: a HARD, deterministic gate on every measured config.
+PACKED_BYTES_GATE = 0.55
+
+
+def packed_rows(configs=None, repeats: int = 30, smoke: bool = False):
+    """bf16-vs-f32 codec lane rows: per config, (1) a hard analytic
+    bytes-on-wire gate — the packed lane ships <= 0.55x the f32 bytes
+    for the SAME element payload ``d``; (2) bit-identity of all three
+    packed codec lanes (multipass / fused jnp / fused u16 Pallas
+    kernels — interpret lane included in ``--smoke``) before any time
+    is reported; (3) interleaved f32-vs-bf16 wall-clock where the
+    packed lane must NOT lose under ``CAMR_BENCH_STRICT=1`` (half the
+    XOR words; the pack is a bitcast)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.collective import (_decode_stage, _encode_stage,
+                                       _resolve_kernels, _wire_buffer,
+                                       camr_collective_bytes, make_plan)
+    from repro.core.schedule import payload_words
+
+    configs = configs if configs is not None else (
+        SMOKE_CONFIGS if smoke else CODEC_CONFIGS)
+    use_kernels = _resolve_kernels(None)       # Pallas iff TPU backend
+    rows, losers = [], []
+    for q, k, pk in configs:
+        d = pk * (k - 1)
+        plan = make_plan(q, k, d)
+        prog = plan.program
+        stage_T = {s: prog.stage_tables(s) for s in (1, 2)}
+        rng = np.random.default_rng(q * 1000 + k * 100 + pk)
+        J_own, K = plan.J_own, plan.K
+        vals = rng.standard_normal((J_own, k - 1, K, d)).astype(np.float32)
+
+        # (1) the bytes-on-wire gate: deterministic, always enforced
+        wire_bytes = {
+            name: camr_collective_bytes(plan, dtype=dt)["camr_total"]
+            for name, dt in (("float32", jnp.float32),
+                             ("bfloat16", jnp.bfloat16))}
+        ratio = wire_bytes["bfloat16"] / wire_bytes["float32"]
+        if ratio > PACKED_BYTES_GATE:
+            raise AssertionError(
+                f"packed lane must move <= {PACKED_BYTES_GATE}x the f32 "
+                f"bytes-on-wire; q={q} k={k} d={d} ships {ratio:.3f}x "
+                f"({wire_bytes['bfloat16']} vs {wire_bytes['float32']})")
+
+        recv_cache: dict = {}
+
+        def recv_for(pkw):
+            # one recv buffer per wire width — every lane of one dtype
+            # must decode the SAME received words or the bit-identity
+            # comparison below compares different inputs
+            if pkw not in recv_cache:
+                r_rng = np.random.default_rng(pkw * 7 + q)
+                recv_cache[pkw] = {s: jnp.asarray(r_rng.integers(
+                    0, 2**32, (stage_T[s].n, k - 1, pkw),
+                    dtype=np.uint32)) for s in (1, 2)}
+            return recv_cache[pkw]
+
+        def make_fn(dtype, codec, kernels):
+            x = jnp.asarray(vals).astype(dtype)
+            wp = payload_words(d, jnp.dtype(dtype).itemsize, k)
+            pkw = wp // (k - 1)
+            r = recv_for(pkw)
+
+            def run():
+                wire = _wire_buffer(x, wp=wp, codec=codec,
+                                    use_kernels=kernels)
+                outs = []
+                for s in (1, 2):
+                    ctx, delta = _encode_stage(
+                        wire, stage_T[s], 0, k=k, pk=pkw, codec=codec,
+                        use_kernels=kernels)
+                    outs.append(delta)
+                    outs.append(_decode_stage(
+                        r[s], ctx, stage_T[s], 0, k=k, pk=pkw,
+                        codec=codec, use_kernels=kernels))
+                return tuple(outs)
+
+            return jax.jit(run)
+
+        # (2) packed-lane bit-identity before timing (same bar as
+        # codec_rows: multipass oracle == fused jnp == fused kernels)
+        lanes = {"multipass": make_fn(jnp.bfloat16, "multipass", False),
+                 "fused_jnp": make_fn(jnp.bfloat16, "fused", False)}
+        if smoke or use_kernels:
+            # u16 Pallas kernels: compiled on TPU, interpret lane in CI
+            lanes["fused_kernels"] = make_fn(jnp.bfloat16, "fused", True)
+        want = jax.tree_util.tree_map(np.asarray, lanes["multipass"]())
+        for name, fn in lanes.items():
+            got = jax.tree_util.tree_map(np.asarray, fn())
+            for a, b in zip(want, got):
+                np.testing.assert_array_equal(a, b, err_msg=name)
+
+        # (3) interleaved wall clock: f32 fused vs bf16 fused
+        fns = {"float32": make_fn(jnp.float32, "fused", use_kernels),
+               "bfloat16": make_fn(jnp.bfloat16, "fused", use_kernels)}
+        times = _time_codecs(fns, (), repeats)
+        t32, t16 = times["float32"], times["bfloat16"]
+        speedup = t32["median_us"] / max(t16["median_us"], 1e-9)
+        if speedup < 1.0:
+            losers.append((q, k, d, speedup))
+        rows.append({
+            "name": f"packed_q{q}_k{k}_d{d}",
+            "us_per_call": t16["median_us"],
+            "derived": (f"bf16={t16['median_us']:.0f}us "
+                        f"f32={t32['median_us']:.0f}us "
+                        f"speedup={speedup:.2f}x "
+                        f"bytes={wire_bytes['bfloat16']} "
+                        f"({ratio:.3f}x of f32, gate "
+                        f"{PACKED_BYTES_GATE}) bit-identical "
+                        f"kernels={'pallas' if use_kernels else 'xla'}"),
+            "config": {"q": q, "k": k, "d": d,
+                       "backend": jax.default_backend(),
+                       "pallas_kernels": bool(use_kernels)},
+            "payload_dtype": "bfloat16",
+            "bytes_on_wire": wire_bytes["bfloat16"],
+            "f32_bytes_on_wire": wire_bytes["float32"],
+            "bytes_ratio": ratio,
+            "median_us": t16["median_us"],
+            "p10_us": t16["p10_us"],
+            "p90_us": t16["p90_us"],
+            "f32_median_us": t32["median_us"],
+            "speedup": speedup,
+        })
+    if losers and not smoke:
+        msg = ("packed bf16 lane must not lose to f32 on wall clock "
+               f"(half the XOR words); lost on {losers}")
+        if os.environ.get("CAMR_BENCH_STRICT") == "1":
+            raise AssertionError(msg)
+        # shared hosts are too noisy for an unconditional microbench gate
+        print(f"# WARNING (noisy host?): {msg}", file=sys.stderr)
+    return rows
+
+
 def rows(smoke: bool | None = None):
     if smoke is None:
         # CI sets CAMR_BENCH_SMOKE=1 so the uploaded bench artifact
         # records codec rows without the (CPU-noise-prone) speed gate;
         # local/TPU `python -m benchmarks.run` stays full-fat
         smoke = os.environ.get("CAMR_BENCH_SMOKE", "") == "1"
-    return _paper_rows() + codec_rows(smoke=smoke)
+    return (_paper_rows() + codec_rows(smoke=smoke)
+            + packed_rows(smoke=smoke))
 
 
 def main() -> None:
@@ -231,11 +383,13 @@ def main() -> None:
     args = ap.parse_args()
     reps = 5 if args.smoke else 30
     print("name,us_per_call,derived")
-    for row in codec_rows(repeats=reps, smoke=args.smoke):
+    for row in (codec_rows(repeats=reps, smoke=args.smoke)
+                + packed_rows(repeats=reps, smoke=args.smoke)):
         print(f"{row['name']},{row['us_per_call']:.1f},"
               f"\"{row['derived']}\"", flush=True)
-    print("# codec outputs verified bit-identical (fused == multipass"
-          + (", incl. Pallas interpret lane)" if args.smoke else ")"))
+    print("# codec outputs verified bit-identical (fused == multipass, "
+          "f32 and packed bf16 lanes"
+          + (", incl. Pallas interpret lanes)" if args.smoke else ")"))
 
 
 if __name__ == "__main__":

@@ -18,6 +18,13 @@ allclose). The SPMD path must win on every config — a hard gate under
 ``CAMR_BENCH_STRICT=1`` (CPU host-device meshes are noisy; compiled
 TPU lanes should see far more than the 5x target).
 
+Two packed-lane rows ride along (DESIGN.md §12): a bf16 sync config
+(same identity gate, half the contribution bytes) and an END-TO-END
+``MultiModelCAMRTrainer`` step with ``grad_sync_dtype="bfloat16"``
+whose parameters must come out bitwise-identical across the
+camr_spmd / camr / uncoded executors — the mixed-precision acceptance
+gate of the training path.
+
     PYTHONPATH=src python -m benchmarks.bench_train [--smoke]
 """
 
@@ -45,6 +52,9 @@ from repro.core.engine import CAMRConfig, CAMREngine
 # (q, k, d) — d = the per-worker function-shard width being synced
 CONFIGS = [(2, 3, 256), (3, 3, 128), (2, 4, 96), (3, 4, 96), (5, 3, 64)]
 SMOKE_CONFIGS = [(2, 3, 16)]
+#: packed-lane sync configs (payload dtype rides the last slot)
+PACKED_CONFIGS = [(2, 3, 256), (3, 3, 128)]
+PACKED_SMOKE_CONFIGS = [(2, 3, 16)]
 TARGET_SPEEDUP = 5.0
 
 
@@ -59,11 +69,19 @@ def _median(fn, reps: int) -> float:
     return ts[len(ts) // 2]
 
 
-def bench_config(q: int, k: int, d: int, reps: int) -> dict:
+def bench_config(q: int, k: int, d: int, reps: int,
+                 dtype=np.float32) -> dict:
+    import ml_dtypes
+
+    np_dtype = np.dtype(dtype)
+    dname = ("bfloat16" if np_dtype == np.dtype(ml_dtypes.bfloat16)
+             else np_dtype.name)
     plan = make_plan(q, k, d)
     K, J = plan.K, plan.J
     rng = np.random.default_rng(0)
     bg = rng.standard_normal((J, k, K, d)).astype(np.float32)
+    if dname != "float32":
+        bg = bg.astype(np_dtype)
     datasets = [[bg[j, t] for t in range(k)] for j in range(J)]
     contribs = scatter_contributions(plan, bg)
 
@@ -82,29 +100,87 @@ def bench_config(q: int, k: int, d: int, reps: int) -> dict:
 
     # -- bit-identity gate BEFORE any timing ---------------------------- #
     results = interp_sync()
-    want = np.empty((K, J, d), np.float32)
+    want = np.empty((K, J, d), np_dtype)
     for s in range(K):
         for j in range(J):
             want[s, j] = results[s][(j, s)]
+    got = np.asarray(spmd_sync())
+    assert got.dtype == np_dtype, (got.dtype, np_dtype)
     np.testing.assert_array_equal(
-        np.asarray(spmd_sync()), want,
-        err_msg=f"spmd grad-sync != engine interpreter (q={q} k={k})")
+        got.view(np.uint8), want.view(np.uint8),
+        err_msg=f"spmd grad-sync != engine interpreter (q={q} k={k} "
+                f"{dname})")
 
     t_interp = _median(interp_sync, reps)
     t_spmd = _median(spmd_sync, reps)
+    suffix = "" if dname == "float32" else f"_{dname}"
     return dict(
-        name=f"train_sync_q{q}_k{k}_d{d}",
-        config={"q": q, "k": k, "K": K, "J": J, "d": d},
+        name=f"train_sync_q{q}_k{k}_d{d}{suffix}",
+        config={"q": q, "k": k, "K": K, "J": J, "d": d,
+                "payload_dtype": dname},
+        payload_dtype=dname,
         interp_us=t_interp * 1e6, spmd_us=t_spmd * 1e6,
         speedup=t_interp / t_spmd,
         sync_bytes=int(contribs.nbytes),
     )
 
 
+def trainer_bf16_identity_row(steps: int = 2) -> dict:
+    """END-TO-END mixed-precision gate: a tiny MultiModelCAMRTrainer
+    runs ``grad_sync_dtype="bfloat16"`` through all three grad-sync
+    executors and the parameters must come out BITWISE-identical
+    (camr_spmd == camr == uncoded); reports wall clock of the SPMD
+    path. Raises on any divergence — this is an acceptance gate, not a
+    timing row."""
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import ShardedTokenPipeline
+    from repro.runtime.train_loop import MultiModelCAMRTrainer
+
+    cfg = reduced(get_config("granite_3_2b")).replace(
+        n_layers=2, vocab=64, d_model=32, d_ff=64, n_heads=2,
+        n_kv_heads=1, head_dim=16, loss_chunk=8)
+    pipe = ShardedTokenPipeline(vocab=64, seq_len=8, global_batch=2)
+    flats, reports, t_spmd = {}, {}, 0.0
+    for mode in ("camr", "uncoded", "camr_spmd"):
+        tr = MultiModelCAMRTrainer(cfg, q=2, k=3, seed=0,
+                                   grad_sync_dtype="bfloat16")
+        t0 = time.perf_counter()
+        reports[mode] = tr.train_steps(pipe, steps, mode=mode)
+        dt = time.perf_counter() - t0
+        if mode == "camr_spmd":
+            t_spmd = dt
+        flats[mode] = np.asarray(tr.flat)
+    for mode in ("uncoded", "camr_spmd"):
+        np.testing.assert_array_equal(
+            flats[mode], flats["camr"],
+            err_msg=f"bf16 grad-sync: {mode} params diverged from the "
+                    "engine oracle")
+    bytes16 = reports["camr"].bytes_total
+    us = t_spmd / steps * 1e6
+    return {
+        "name": "train_bf16_grad_sync_identity",
+        "us_per_call": us,
+        "derived": (f"camr_spmd==camr==uncoded BITWISE over {steps} "
+                    f"bf16 steps; shuffle_bytes={bytes16} "
+                    f"spmd={us:.0f}us/step"),
+        "config": {"q": 2, "k": 3, "steps": steps,
+                   "payload_dtype": "bfloat16"},
+        "payload_dtype": "bfloat16",
+        "bytes_on_wire": bytes16,
+        "median_us": us,
+    }
+
+
 def _bench_rows(smoke: bool, reps: int) -> list:
+    import ml_dtypes
+
     rows, losers = [], []
-    for q, k, d in (SMOKE_CONFIGS if smoke else CONFIGS):
-        r = bench_config(q, k, d, reps)
+    sync_cfgs = [(q, k, d, np.float32)
+                 for q, k, d in (SMOKE_CONFIGS if smoke else CONFIGS)]
+    sync_cfgs += [(q, k, d, ml_dtypes.bfloat16) for q, k, d in
+                  (PACKED_SMOKE_CONFIGS if smoke else PACKED_CONFIGS)]
+    for q, k, d, dtype in sync_cfgs:
+        r = bench_config(q, k, d, reps, dtype=dtype)
         if r["speedup"] <= 1.0:
             losers.append(r["name"])
         rows.append({
@@ -113,13 +189,20 @@ def _bench_rows(smoke: bool, reps: int) -> list:
             "derived": (f"interp={r['interp_us']:.0f}us "
                         f"spmd={r['spmd_us']:.0f}us "
                         f"speedup={r['speedup']:.1f}x "
-                        f"(target {TARGET_SPEEDUP:.0f}x) bit-identical"),
+                        f"(target {TARGET_SPEEDUP:.0f}x) "
+                        f"dtype={r['payload_dtype']} "
+                        f"sync_bytes={r['sync_bytes']} bit-identical"),
             "config": r["config"],
+            "payload_dtype": r["payload_dtype"],
+            "sync_bytes": r["sync_bytes"],
             "median_us": r["spmd_us"],
             "interp_median_us": r["interp_us"],
             "speedup": r["speedup"],
         })
-    if losers:
+    rows.append(trainer_bf16_identity_row())
+    # --smoke configs are too tiny for a meaningful wall-clock gate
+    # (same policy as bench_encoding): bit-identity still gates above
+    if losers and not smoke:
         msg = ("SPMD grad-sync must beat the interpreter on every "
                f"config; lost on {losers}")
         if os.environ.get("CAMR_BENCH_STRICT") == "1":
@@ -140,30 +223,46 @@ def rows(smoke: bool | None = None):
     need = max(q * k for q, k, _ in (SMOKE_CONFIGS if smoke else CONFIGS))
     if len(jax.devices()) >= need:
         return _bench_rows(smoke, reps=5 if smoke else 15)
-    import csv
-    import io
+    import json
     import subprocess
-    cmd = [sys.executable, "-m", "benchmarks.bench_train"]
-    if smoke:
-        cmd.append("--smoke")
-    res = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
-                         env={**os.environ, "JAX_PLATFORMS": "cpu"})
-    if res.returncode != 0:
-        raise RuntimeError(f"subprocess bench failed: {res.stderr[-500:]}")
-    reader = csv.DictReader(io.StringIO(res.stdout))
-    return [{"name": r["name"], "us_per_call": float(r["us_per_call"]),
-             "derived": r["derived"]} for r in reader]
+    import tempfile
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as tf:
+        cmd = [sys.executable, "-m", "benchmarks.bench_train",
+               "--json-rows", tf.name]
+        if smoke:
+            cmd.append("--smoke")
+        res = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=900,
+                             env={**os.environ, "JAX_PLATFORMS": "cpu"})
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"subprocess bench failed: {res.stderr[-500:]}")
+        # full rows (payload_dtype, sync_bytes, speedup, ...) for the
+        # --json artifact; a missing/corrupt file is a real bug in the
+        # writer above — fail loudly rather than degrade the artifact
+        with open(tf.name) as f:
+            return json.load(f)
 
 
 def main():
+    import json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny config, few reps (CI train-smoke)")
+    ap.add_argument("--json-rows", default=None, metavar="PATH",
+                    help="also dump the full row dicts as JSON (the "
+                         "rows() subprocess relay uses this to keep "
+                         "payload_dtype/bytes fields in the artifact)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for row in _bench_rows(args.smoke, reps=5 if args.smoke else 15):
+    rows_ = _bench_rows(args.smoke, reps=5 if args.smoke else 15)
+    for row in rows_:
         print(f"{row['name']},{row['us_per_call']:.1f},"
               f"\"{row['derived']}\"", flush=True)
+    if args.json_rows:
+        with open(args.json_rows, "w") as f:
+            json.dump(rows_, f, default=str)
     print("# spmd grad-sync verified bit-identical to the engine "
           "interpreter before timing", file=sys.stderr)
 

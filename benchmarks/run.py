@@ -18,9 +18,11 @@ Tables:
 
 ``--json PATH`` additionally writes machine-readable results: every row
 verbatim (suites may attach ``config``, ``median_us``/``p10_us``/
-``p90_us`` spreads and ``speedup`` beyond the CSV columns) plus
-backend/timing metadata — CI uploads the file as the bench-trajectory
-artifact (.github/workflows/ci.yml).
+``p90_us`` spreads, ``speedup``, and — for shuffle-payload suites
+(encoding, train) — ``payload_dtype`` and ``bytes_on_wire`` of the
+codec lane measured, DESIGN.md §12) plus backend/timing metadata — CI
+uploads the file as the bench-trajectory artifact
+(.github/workflows/ci.yml).
 """
 
 import argparse

@@ -40,6 +40,11 @@ def main():
     ap.add_argument("--modes", default="camr,uncoded,camr_spmd",
                     help="comma-separated grad-sync modes to run and "
                          "compare (first one is the reference)")
+    ap.add_argument("--grad-sync-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="shuffle payload dtype — bfloat16 rides the "
+                         "packed 16-bit codec lane (DESIGN.md §12); the "
+                         "bit-identity assertions hold per lane")
     args = ap.parse_args()
     modes = args.modes.split(",")
 
@@ -51,7 +56,8 @@ def main():
     reports, trainers = {}, {}
     for mode in modes:
         tr = MultiModelCAMRTrainer(cfg, q=2, k=3, lr=1e-3, seed=0,
-                                   spmd_oracle=(mode == "camr_spmd"))
+                                   spmd_oracle=(mode == "camr_spmd"),
+                                   grad_sync_dtype=args.grad_sync_dtype)
         reports[mode] = tr.train_steps(pipe, args.steps, mode=mode)
         trainers[mode] = tr
         extra = (f" sync={reports[mode].sync}" if reports[mode].sync

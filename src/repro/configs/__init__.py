@@ -71,8 +71,13 @@ class ModelConfig:
     ssm_chunk: int = 256                # XLA-lane SSD chunk length
     # paper integration: gradient sync mode for the data-parallel axis
     grad_sync: str = "allreduce"        # allreduce | camr
-    grad_sync_dtype: str = "float32"    # float32 | bfloat16 (compressed
-    #                                     gradient reduction — §Perf lever)
+    grad_sync_dtype: str = "float32"    # float32 | bfloat16 — bf16 syncs
+    #                                     gradients on the packed 16-bit
+    #                                     codec lane at half the bytes,
+    #                                     f32 master params (DESIGN.md
+    #                                     §12; MultiModelCAMRTrainer and
+    #                                     launch/train.py
+    #                                     --grad-sync-dtype)
 
     @property
     def hd(self) -> int:

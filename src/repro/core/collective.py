@@ -50,6 +50,12 @@ tables — via the scalar-prefetch Pallas kernels of
 TPU backends), via one jnp gather otherwise. ``codec="multipass"``
 keeps the original gather → take_along_axis → fold pipeline as the
 CPU/GPU oracle (bit-identical, tests/test_codec_fused.py).
+
+Payload dtypes take one of two wire lanes (DESIGN.md §12): 4-byte
+dtypes (f32/u32) bitcast one value per u32 word; 16-bit floats
+(bf16/f16) PACK two values per word, halving bytes-on-wire for the
+coded stages and shipping stage-3 unicasts at native width — the
+shuffle itself stays a lossless bit transport on either lane.
 """
 
 from __future__ import annotations
@@ -65,12 +71,14 @@ from jax import lax
 
 from .designs import ResolvableDesign
 from .placement import Placement
-from .schedule import SCHEDULE_CACHE, ShuffleProgram, StageTables
+from .schedule import (SCHEDULE_CACHE, ShuffleProgram, StageTables,
+                       payload_words)
 
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
            "camr_collective_bytes", "expected_collective_calls",
-           "ShuffleStream", "CODEC_DTYPES", "check_codec_dtype"]
+           "ShuffleStream", "CODEC_DTYPES", "PACKED_DTYPES",
+           "check_codec_dtype"]
 
 
 # --------------------------------------------------------------------- #
@@ -145,20 +153,30 @@ def make_plan(q: int, k: int, d: int) -> CAMRPlan:
 # --------------------------------------------------------------------- #
 # bit helpers
 # --------------------------------------------------------------------- #
-#: dtypes the XOR codec can bitcast to 32-bit words.
-CODEC_DTYPES = ("float32", "uint32")
+#: payload dtypes the XOR codec can move, and (implicitly) the wire
+#: lane each takes: 4-byte dtypes bitcast one value per u32 word;
+#: :data:`PACKED_DTYPES` pack two 16-bit values per word at half the
+#: bytes-on-wire (DESIGN.md §12). This tuple is the single source of
+#: truth for codec dtype support — the JobStream entry guard
+#: (:mod:`repro.runtime.jobstream`) consumes it rather than keeping a
+#: second hand-rolled list.
+CODEC_DTYPES = ("float32", "uint32", "bfloat16", "float16")
+
+#: the 16-bit members of :data:`CODEC_DTYPES` — the packed wire lane.
+PACKED_DTYPES = ("bfloat16", "float16")
 
 
 def check_codec_dtype(dtype, where: str) -> None:
     """Entry guard: fail fast, with a fix, instead of a bare TypeError
-    from ``_to_u32`` deep inside the shard_map trace."""
+    from ``_wire_buffer`` deep inside the shard_map trace."""
     if jnp.dtype(dtype).name not in CODEC_DTYPES:
         raise TypeError(
-            f"{where}: the CAMR XOR codec operates on 32-bit words; "
-            f"supported gradient dtypes are {', '.join(CODEC_DTYPES)}, "
-            f"got {jnp.dtype(dtype).name}. Cast the contributions first "
-            "(e.g. contribs.astype(jnp.float32)) — bf16/f16 values can "
-            "be shuffled at f32 width and cast back after the reduce.")
+            f"{where}: the CAMR XOR codec moves 32-bit wire words; "
+            f"supported payload dtypes are {', '.join(CODEC_DTYPES)} "
+            "(bf16/f16 ride the packed 16-bit lane, two values per "
+            f"word — DESIGN.md §12), got {jnp.dtype(dtype).name}. Cast "
+            "the contributions to a supported dtype first (e.g. "
+            "contribs.astype(jnp.float32)).")
 
 
 def _to_u32(x):
@@ -166,11 +184,51 @@ def _to_u32(x):
         return lax.bitcast_convert_type(x, jnp.uint32)
     if x.dtype == jnp.uint32:
         return x
-    raise TypeError(f"XOR path expects f32/u32, got {x.dtype}")
+    raise TypeError(f"XOR word lane expects f32/u32, got {x.dtype}")
 
 
 def _from_u32(x, dtype):
     return lax.bitcast_convert_type(x, dtype) if dtype != jnp.uint32 else x
+
+
+def _u16_pairs_to_u32(x):
+    """u16 ``[..., 2*m]`` lane pairs -> u32 ``[..., m]`` wire words
+    (little-endian: lane ``2i`` is the low half of word ``i`` — the
+    byte order of :func:`repro.core.schedule.pack_payload`)."""
+    return lax.bitcast_convert_type(
+        x.reshape(*x.shape[:-1], x.shape[-1] // 2, 2), jnp.uint32)
+
+
+def _wire_buffer(x, *, wp: int, codec: str, use_kernels: bool):
+    """Contributions -> the codec's chunk buffer (DESIGN.md §12).
+
+    32-bit dtypes bitcast straight to u32. 16-bit dtypes are viewed as
+    u16 lanes, zero-padded per shard from ``d`` to ``2*wp`` lanes (the
+    deterministic trailing-lane pad rule), and either packed to u32
+    words (jnp / multipass lanes) or handed to the Pallas gather
+    kernels as the u16 view itself — the kernels fold lane pairs
+    natively, so the pack is a same-width bitcast of their half-width
+    output and no value ever widens to 4 bytes in HBM.
+    """
+    if jnp.dtype(x.dtype).itemsize != 2:
+        return _to_u32(x)
+    u16 = lax.bitcast_convert_type(x, jnp.uint16)
+    pad = 2 * wp - x.shape[-1]
+    if pad:
+        u16 = jnp.pad(u16, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    if codec == "fused" and use_kernels:
+        return u16
+    return _u16_pairs_to_u32(u16)
+
+
+def _from_wire(words, dtype, d: int):
+    """Decoded u32 wire words ``[n, wp]`` -> payload values ``[n, d]``
+    (inverse of :func:`_wire_buffer`'s per-shard packing)."""
+    if jnp.dtype(dtype).itemsize == 2:
+        u16 = lax.bitcast_convert_type(words, jnp.uint16)
+        u16 = u16.reshape(words.shape[0], -1)[:, :d]
+        return lax.bitcast_convert_type(u16, dtype)
+    return _from_u32(words, dtype)
 
 
 def _xor_reduce(x, axis):
@@ -237,24 +295,32 @@ def _gather_decode(recv_flat, flat, rsel, idx, mask, use_kernels: bool):
 #   fold pipeline, kept as the CPU/GPU oracle the fused path must match
 #   bit-for-bit (tests/test_codec_fused.py).
 # --------------------------------------------------------------------- #
-def _encode_stage(u32, T: StageTables, me, *, k, pk, codec, use_kernels):
+def _encode_stage(wire, T: StageTables, me, *, k, pk, codec, use_kernels):
     """Prologue shared by both modes: the sender-side
     Δ = XOR_p pkt(G[p], pos(me, G[p])) (self-row zero).
 
-    Returns ``(ctx, delta [n, pk])`` where ``ctx`` is whatever the
-    matching :func:`_decode_stage` needs to cancel packets — the flat
-    ``u32[·, pk]`` chunk-buffer view (fused) or the materialized packet
-    table ``u32[n, k, k-1, pk]`` (multipass)."""
+    ``wire`` is the chunk buffer :func:`_wire_buffer` built — u32 wire
+    words, or the u16 lane view on the packed-kernel lane. Returns
+    ``(ctx, delta [n, pk])`` (delta always in u32 wire words) where
+    ``ctx`` is whatever the matching :func:`_decode_stage` needs to
+    cancel packets — the flat ``[·, pk]`` chunk-buffer view (fused) or
+    the materialized packet table ``u32[n, k, k-1, pk]`` (multipass)."""
     def dev(tab):
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
     n = T.n
     if codec == "fused":
-        flat = u32.reshape(-1, pk)     # free view: packets are contiguous
+        if wire.dtype == jnp.uint16:   # packed lane, Pallas kernels
+            from repro.kernels.xor_code import xor_encode_gather16
+            flat = wire.reshape(-1, 2 * pk)
+            delta16 = xor_encode_gather16(flat, dev(T.enc_src),
+                                          dev(T.src_ok))
+            return flat, _u16_pairs_to_u32(delta16)
+        flat = wire.reshape(-1, pk)    # free view: packets are contiguous
         delta = _gather_fold(flat, dev(T.enc_src), dev(T.src_ok),
                              use_kernels)
         return flat, delta
-    chunks = u32[dev(T.src_jslot), dev(T.src_bslot), jnp.asarray(T.shard)]
+    chunks = wire[dev(T.src_jslot), dev(T.src_bslot), jnp.asarray(T.shard)]
     chunks = jnp.where(dev(T.src_ok)[:, :, None], chunks, 0)  # [n, k, d]
     packets = chunks.reshape(n, k, k - 1, pk)
     my_pkts = jnp.take_along_axis(
@@ -272,6 +338,17 @@ def _decode_stage(recv, ctx, T: StageTables, me, *, k, pk, codec,
 
     n = T.n
     if codec == "fused":
+        if ctx.dtype == jnp.uint16:    # packed lane, Pallas kernels
+            from repro.kernels.xor_code import xor_decode_gather16
+            recv16 = lax.bitcast_convert_type(
+                recv.reshape(n * (k - 1), pk),
+                jnp.uint16).reshape(n * (k - 1), 2 * pk)
+            dec16 = xor_decode_gather16(
+                recv16, ctx,
+                dev(T.dec_recv).reshape(n * (k - 1)),
+                dev(T.dec_src).reshape(n * (k - 1), k),
+                dev(T.dec_mask).reshape(n * (k - 1), k))
+            return _u16_pairs_to_u32(dec16).reshape(n, (k - 1) * pk)
         dec = _gather_decode(
             recv.reshape(n * (k - 1), pk), ctx,
             dev(T.dec_recv).reshape(n * (k - 1)),
@@ -294,18 +371,19 @@ def _decode_stage(recv, ctx, T: StageTables, me, *, k, pk, codec,
     return chunk.reshape(n, (k - 1) * pk)
 
 
-def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
+def _stage_coded_batched(axis_name, wire, T: StageTables, me, *,
                          q, k, K, pk, router, codec, use_kernels):
     """One coded stage as ``k-1`` grouped collectives (DESIGN.md §4).
 
-    Returns decoded chunks ``u32[n, d]`` — row order = the stage's group
-    rank order (stage 1: job order; stage 2: ``s2_ord`` ordinals).
+    Returns decoded chunks ``u32[n, wp]`` — row order = the stage's
+    group rank order (stage 1: job order; stage 2: ``s2_ord``
+    ordinals).
     """
     def dev(tab):
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
     R = int(T.R)
-    ctx, delta = _encode_stage(u32, T, me, k=k, pk=pk, codec=codec,
+    ctx, delta = _encode_stage(wire, T, me, k=k, pk=pk, codec=codec,
                                use_kernels=use_kernels)
     recv = []
     for r in range(1, k):
@@ -335,11 +413,11 @@ def _stage_coded_batched(axis_name, u32, T: StageTables, me, *,
                          use_kernels=use_kernels)
 
 
-def _stage_coded_looped(axis_name, u32, T: StageTables, rounds_list, me, *,
+def _stage_coded_looped(axis_name, wire, T: StageTables, rounds_list, me, *,
                         k, pk, codec, use_kernels):
     """Legacy exchange — one ppermute per group per round (benchmark
     baseline; same tables, same encode/decode)."""
-    ctx, delta = _encode_stage(u32, T, me, k=k, pk=pk, codec=codec,
+    ctx, delta = _encode_stage(wire, T, me, k=k, pk=pk, codec=codec,
                                use_kernels=use_kernels)
     n = T.n
     valid = jnp.take(jnp.asarray(T.valid), me, axis=0)
@@ -368,6 +446,12 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     over the schedule's flat index tables; ``codec="multipass"`` is the
     original multi-pass pipeline, kept as the oracle (DESIGN.md §10).
 
+    bf16/f16 contributions take the packed wire lane (DESIGN.md §12):
+    two values per u32 word through stages 1+2 and native-width stage-3
+    unicasts — half the bytes-on-wire of an f32 shuffle of the same
+    ``d``, with the decoded bit patterns exactly equal to the inputs'
+    (the XOR transport never does arithmetic on either lane).
+
     Per-device outputs are BITWISE equal to the numpy engine's reduce
     results for the same contributions: XOR delivery is lossless and
     the assembly folds batch aggregates in the engine's canonical
@@ -388,12 +472,16 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         raise ValueError(f"unknown codec {codec!r}")
     use_kernels = _resolve_kernels(use_kernels)
     me = lax.axis_index(axis_name)
-    pk = plan.packet_len
+    # wire lane (DESIGN.md §12): wp u32 words per shard — d for 4-byte
+    # dtypes, ceil(d/2) (+ pad to a packet multiple) for packed 16-bit
+    wp = payload_words(d, jnp.dtype(dtype).itemsize, k)
+    pk = wp // (k - 1)
 
     def dev(tab):
         return jnp.take(jnp.asarray(tab), me, axis=0)
 
-    u32 = _to_u32(contribs)  # [J_own, k-1, K, d]
+    wire = _wire_buffer(contribs, wp=wp, codec=codec,
+                        use_kernels=use_kernels)  # [J_own, k-1, K, wp]
 
     # ========== stages 1 + 2: one shared coded-exchange machine ======== #
     stage_vals = {}
@@ -401,13 +489,13 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         T = prog.stage_tables(stage)
         if mode == "batched":
             decoded = _stage_coded_batched(
-                axis_name, u32, T, me, q=q, k=k, K=K, pk=pk,
+                axis_name, wire, T, me, q=q, k=k, K=K, pk=pk,
                 router=router, codec=codec, use_kernels=use_kernels)
         else:
             decoded = _stage_coded_looped(
-                axis_name, u32, T, prog.round_perms(stage), me,
+                axis_name, wire, T, prog.round_perms(stage), me,
                 k=k, pk=pk, codec=codec, use_kernels=use_kernels)
-        stage_vals[stage] = _from_u32(decoded, dtype)
+        stage_vals[stage] = _from_wire(decoded, dtype, d)
     stage1_val = stage_vals[1]   # [J, d]; row j valid where I own job j
     stage2_val = stage_vals[2]   # [n_s2, d]; rows at my s2_ord ordinals
 
@@ -678,13 +766,24 @@ class ShuffleStream:
         return self.drain()
 
 
-def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4
-                          ) -> dict[str, int]:
+def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4,
+                          dtype=None) -> dict[str, int]:
     """On-wire bytes per device-step of the SPMD schedule (p2p model),
-    for the §Perf comparison against psum-based reduce-scatter."""
-    pk_b = plan.packet_len * itemsize
+    for the §Perf comparison against psum-based reduce-scatter.
+
+    ``dtype`` selects the wire lane: 16-bit dtypes pack two values per
+    u32 word through the coded stages 1+2 (plus at most ``k-2`` pad
+    words per shard) and ship stage-3 unicasts at native width, so the
+    total is ~half the f32 bytes for the same element payload ``d``
+    (DESIGN.md §12).
+    """
+    if dtype is not None:
+        check_codec_dtype(dtype, "camr_collective_bytes")
+        itemsize = jnp.dtype(dtype).itemsize
     k, q, J, J_own, K, d = (plan.k, plan.q, plan.J, plan.J_own, plan.K,
                             plan.d)
+    # coded packets move as u32 wire words regardless of payload dtype
+    pk_b = (payload_words(d, itemsize, k) // (k - 1)) * 4
     s1 = J * (k - 1) * pk_b * k            # J groups, k-1 rounds, k senders
     s2 = plan.program.n_s2 * (k - 1) * pk_b * k
     s3 = (q - 1) * J_own * d * itemsize * K

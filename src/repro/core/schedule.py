@@ -69,7 +69,63 @@ __all__ = [
     "lower_degraded",
     "ScheduleCache",
     "SCHEDULE_CACHE",
+    "payload_words",
+    "pack_payload",
+    "unpack_payload",
 ]
+
+
+# --------------------------------------------------------------------- #
+# packed payload widths (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+def payload_words(d: int, itemsize: int, k: int) -> int:
+    """u32 words per function shard for a ``d``-element payload of the
+    given ``itemsize``, padded so the shard splits into ``k-1`` equal
+    codec packets.
+
+    The XOR codec moves 32-bit words; sub-word dtypes (bf16/f16) pack
+    ``4 // itemsize`` values per word, so a 16-bit shard costs
+    ``ceil(d/2)`` words — HALF the f32 bytes — plus at most ``k-2``
+    deterministic zero pad words. For 4-byte dtypes this is exactly
+    ``d`` (callers already guarantee ``(k-1) | d``), so every lane
+    shares one width formula. The schedule tables are payload-width
+    independent (packet units); a word-width program view is the same
+    cheap width stamp the :class:`ScheduleCache` already shares.
+    """
+    if itemsize not in (2, 4):
+        raise ValueError(f"payload itemsize must be 2 or 4 bytes, got "
+                         f"{itemsize}")
+    w = -(-d * itemsize // 4)
+    return w + (-w) % (k - 1)
+
+
+def pack_payload(x: np.ndarray, k: int) -> np.ndarray:
+    """Pack a 16-bit payload ``[..., d]`` into u32 words ``[..., wp]``
+    (``wp = payload_words(d, 2, k)``) — the numpy mirror of the SPMD
+    packing, byte-identical to the device lane (little-endian: value
+    ``2i`` is the low half of word ``i``; odd/trailing lanes pad with
+    zero u16).
+    """
+    x = np.asarray(x)
+    if x.dtype.itemsize != 2:
+        raise TypeError(f"pack_payload packs 16-bit payloads, got "
+                        f"{x.dtype}")
+    d = x.shape[-1]
+    wp = payload_words(d, 2, k)
+    u16 = np.zeros(x.shape[:-1] + (2 * wp,), dtype=np.uint16)
+    u16[..., :d] = x.view(np.uint16)
+    return np.ascontiguousarray(u16).view(np.uint32)
+
+
+def unpack_payload(w: np.ndarray, dtype, d: int) -> np.ndarray:
+    """Inverse of :func:`pack_payload`: u32 words ``[..., wp]`` back to
+    the 16-bit payload ``[..., d]`` (pad lanes dropped)."""
+    w = np.asarray(w)
+    if w.dtype != np.uint32:
+        raise TypeError(f"unpack_payload expects uint32 words, got "
+                        f"{w.dtype}")
+    u16 = np.ascontiguousarray(w).view(np.uint16)
+    return np.ascontiguousarray(u16[..., :d]).view(np.dtype(dtype))
 
 
 # --------------------------------------------------------------------- #

@@ -32,6 +32,14 @@ Two kernel families (DESIGN.md §10):
   ``argsort``/gather of the multipass path is baked into the schedule
   lowering.
 
+* ``xor_encode_gather16`` / ``xor_decode_gather16`` — the PACKED
+  low-precision lane (DESIGN.md §12): the same fused gathers running
+  natively on the u16 view of a bf16/f16 chunk buffer (two lanes per
+  u32 wire word). XOR commutes with the bit partition, so folding u16
+  lane pairs is bit-identical to folding the packed u32 words; pack
+  (encode output) and unpack (decode output) are same-width bitcasts —
+  no 16-bit value ever widens to a 4-byte word in HBM.
+
 Tiling: grid over (row, word-block[, source]); each program XOR-folds
 lane-aligned ``(1, BLOCK)`` tiles held in VMEM. For the gather kernels
 the source axis is innermost, so the output tile stays resident in VMEM
@@ -48,7 +56,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["xor_encode", "xor_fold", "xor_decode",
-           "xor_encode_gather", "xor_decode_gather"]
+           "xor_encode_gather", "xor_decode_gather",
+           "xor_encode_gather16", "xor_decode_gather16"]
 
 _BLOCK = 1024  # u32 words per tile; multiple of the 128-lane VPU width
 _LANE = 128
@@ -315,3 +324,109 @@ def xor_decode_gather(recv: jnp.ndarray, chunks: jnp.ndarray,
     )(rsel.astype(jnp.int32), idx.astype(jnp.int32), _mask_words(mask),
       rv, x)
     return out[:, :pk]
+
+
+# --------------------------------------------------------------------- #
+# packed 16-bit lane (pack/unpack-fused gather kernels, DESIGN.md §12)
+#
+# bf16/f16 payloads ride the codec as PAIRS of 16-bit lanes per u32
+# wire word. XOR commutes with any bit partition, so the fold can run
+# natively on the u16 view of the half-precision chunk buffer — the
+# "pack" into wire words is a same-width bitcast of the kernel output,
+# never a widening: no value ever occupies 4 bytes in HBM on this lane
+# (the unpacked-u32 transient a cast-to-f32 shuffle would pay).
+# Tables are the SAME d-independent packet-row indices as the u32
+# kernels; only the lane count per packet doubles.
+# --------------------------------------------------------------------- #
+def _mask_words16(mask: jnp.ndarray) -> jnp.ndarray:
+    """bool -> u16 0x0000/0xFFFF (AND-applicable mask lanes)."""
+    return jnp.where(mask, jnp.uint16(0xFFFF), jnp.uint16(0))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_encode_gather16(chunks: jnp.ndarray, idx: jnp.ndarray,
+                        mask: jnp.ndarray, *, block: int = _BLOCK,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Packed-lane fused encode: :func:`xor_encode_gather` over a u16
+    chunk buffer ``u16[P, 2*pk]`` (the bitcast view of the padded
+    bf16/f16 contributions — see ``collective._wire_buffer``).
+
+    Returns ``u16[n, 2*pk]``; the caller bitcasts lane pairs to the
+    ``u32[n, pk]`` wire Δ (a same-width reinterpretation — the pack is
+    fused in the sense that no widened per-value word is ever
+    materialized).
+    """
+    if chunks.dtype != jnp.uint16:
+        raise TypeError("xor_encode_gather16 expects uint16")
+    interpret = _resolve_interpret(interpret)
+    n, m = idx.shape
+    if mask.shape != (n, m):
+        raise ValueError(f"mask shape {mask.shape} != {(n, m)}")
+    pk2 = chunks.shape[1]
+    if pk2 % 2:
+        raise ValueError(f"packed packet lane count must be even, got "
+                         f"{pk2}")
+    blk, pkp = _tile(pk2, block)
+    x = jnp.pad(chunks, ((0, 0), (0, pkp - pk2)))
+    out = pl.pallas_call(
+        _encode_gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n, pkp // blk, m),
+            in_specs=[
+                pl.BlockSpec((1, blk), lambda i, b, j, idx_r, msk_r:
+                             (idx_r[i, j], b)),
+            ],
+            out_specs=pl.BlockSpec((1, blk), lambda i, b, j, *_: (i, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, pkp), jnp.uint16),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), _mask_words16(mask), x)
+    return out[:, :pk2]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def xor_decode_gather16(recv: jnp.ndarray, chunks: jnp.ndarray,
+                        rsel: jnp.ndarray, idx: jnp.ndarray,
+                        mask: jnp.ndarray, *, block: int = _BLOCK,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Packed-lane fused decode: :func:`xor_decode_gather` with the
+    received wire words viewed as u16 lane pairs (``recv: u16[R,
+    2*pk]``) and cancellation packets read straight from the u16 chunk
+    buffer. Output rows are chunk slots in 16-bit lanes — the caller's
+    unpack is a slice + same-width bitcast, so the decoded payload
+    never round-trips through a widened word buffer.
+    """
+    if recv.dtype != jnp.uint16 or chunks.dtype != jnp.uint16:
+        raise TypeError("xor_decode_gather16 expects uint16")
+    interpret = _resolve_interpret(interpret)
+    R, m = idx.shape
+    pk2 = chunks.shape[1]
+    if recv.shape[1] != pk2:
+        raise ValueError(f"recv width {recv.shape[1]} != chunks width "
+                         f"{pk2}")
+    if rsel.shape != (R,):
+        raise ValueError(f"rsel shape {rsel.shape} != {(R,)}")
+    if mask.shape != (R, m):
+        raise ValueError(f"mask shape {mask.shape} != {(R, m)}")
+    blk, pkp = _tile(pk2, block)
+    rv = jnp.pad(recv, ((0, 0), (0, pkp - pk2)))
+    x = jnp.pad(chunks, ((0, 0), (0, pkp - pk2)))
+    out = pl.pallas_call(
+        _decode_gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(R, pkp // blk, m),
+            in_specs=[
+                pl.BlockSpec((1, blk), lambda i, b, j, rsel_r, *_:
+                             (rsel_r[i], b)),
+                pl.BlockSpec((1, blk), lambda i, b, j, rsel_r, idx_r, msk_r:
+                             (idx_r[i, j], b)),
+            ],
+            out_specs=pl.BlockSpec((1, blk), lambda i, b, j, *_: (i, b)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((R, pkp), jnp.uint16),
+        interpret=interpret,
+    )(rsel.astype(jnp.int32), idx.astype(jnp.int32), _mask_words16(mask),
+      rv, x)
+    return out[:, :pk2]

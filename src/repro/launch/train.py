@@ -16,6 +16,10 @@ the unicast baseline. All three produce bit-identical parameters.
     PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b \
         --reduced --multi-model --q 2 --k 3 --grad-sync camr_spmd \
         --steps 3
+
+``--grad-sync-dtype bfloat16`` (multi-model only) switches the shuffle
+payload to the packed 16-bit codec lane — half the bytes-on-wire, f32
+master params/moments (DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -41,13 +45,15 @@ def _run_multi_model(cfg, args) -> None:
     failed = ({int(s) for s in args.failed.split(",")}
               if args.failed else None)
     tr = MultiModelCAMRTrainer(cfg, q=args.q, k=args.k, lr=args.lr,
-                               failed=failed)
+                               failed=failed,
+                               grad_sync_dtype=args.grad_sync_dtype)
     t0 = time.time()
     rep = tr.train_steps(pipe, args.steps, mode=args.grad_sync)
     dt = time.time() - t0
     for step, losses in enumerate(rep.losses):
         print(json.dumps({"step": step + 1, "losses": losses}))
     print(json.dumps({"mode": rep.mode, "bytes_total": rep.bytes_total,
+                      "grad_sync_dtype": rep.grad_sync_dtype,
                       "loads": rep.loads, "sync": rep.sync}))
     print(f"# {args.steps} steps x {tr.camr.J} models in {dt:.1f}s "
           f"({args.steps / dt:.2f} steps/s)")
@@ -68,6 +74,13 @@ def main():
     ap.add_argument("--grad-sync",
                     choices=["allreduce", "camr", "camr_spmd", "uncoded"],
                     default="allreduce")
+    ap.add_argument("--grad-sync-dtype",
+                    choices=["float32", "bfloat16"], default="float32",
+                    help="gradient shuffle payload dtype: bfloat16 syncs "
+                         "on the packed 16-bit codec lane at half the "
+                         "bytes-on-wire, with f32 master params/moments "
+                         "(DESIGN.md §12; float16 is rejected by the "
+                         "trainer — no loss scaling)")
     ap.add_argument("--multi-model", action="store_true",
                     help="train J = q^(k-1) models with CAMR-coded "
                          "gradient aggregation")
@@ -91,6 +104,10 @@ def main():
         raise SystemExit(f"--grad-sync {args.grad_sync} is a "
                          "--multi-model wire; the single-model loop "
                          "takes allreduce|camr")
+    if args.grad_sync_dtype != "float32":
+        raise SystemExit("--grad-sync-dtype is a --multi-model option "
+                         "(the compressed CAMR gradient shuffle); the "
+                         "single-model loop reduces at float32")
     cfg = cfg.replace(grad_sync=args.grad_sync)
     pipe = ShardedTokenPipeline(vocab=cfg.vocab, seq_len=args.seq_len,
                                 global_batch=args.batch)

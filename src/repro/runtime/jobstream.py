@@ -46,21 +46,29 @@ from repro.core.schedule import SCHEDULE_CACHE
 
 __all__ = ["JobSpec", "JobStream", "StreamReport"]
 
-#: dtypes the XOR codec cannot bitcast to 32-bit words — rejected at
-#: stream entry, not discovered deep inside a trace (the SPMD
-#: counterpart's ``_to_u32`` would raise a bare TypeError mid-shuffle).
-_HALF_DTYPES = ("float16", "bfloat16")
-
-
 def _check_wave_dtype(dtype, where: str) -> None:
-    name = np.dtype(dtype).name
-    if name in _HALF_DTYPES:
+    """Entry guard for half-precision value dtypes.
+
+    The numpy engine XORs raw bytes, so every full-width dtype (and
+    sub-word integers) transports losslessly, as it always has. 16-bit
+    floats are accepted exactly when the SPMD codec lists a wire lane
+    for them — :data:`repro.core.collective.PACKED_DTYPES`, backed by
+    :data:`~repro.core.collective.CODEC_DTYPES` as the single source
+    of truth (DESIGN.md §12) — so this guard and the collective's can
+    never drift apart. Today both halves are packed-lane members and
+    the raise arm is a tripwire against a future lane removal.
+    """
+    from repro.core.collective import CODEC_DTYPES, PACKED_DTYPES
+
+    dt = np.dtype(dtype)
+    half_float = (dt.itemsize == 2
+                  and (dt.kind == "f" or dt.name == "bfloat16"))
+    if half_float and dt.name not in CODEC_DTYPES:
         raise TypeError(
-            f"{where}: the CAMR coded shuffle moves 32-bit words; "
-            f"half-precision values ({name}) are not supported — map to "
-            "float32 (v.astype(np.float32)) and cast back after the "
-            "reduce. Supported value dtypes: float32/uint32 on the SPMD "
-            "path, any full-width dtype on the numpy engine.")
+            f"{where}: {dt.name} values have no codec wire lane; the "
+            f"packed 16-bit lane covers {', '.join(PACKED_DTYPES)} "
+            "(DESIGN.md §12) — cast the map outputs "
+            "(v.astype(np.float32)) or use a supported dtype.")
 
 
 @dataclass(frozen=True)

@@ -30,10 +30,18 @@
   * ``mode="uncoded"`` — same placement, unicast everything (the
     paper's baseline).
 
-  All three produce BIT-IDENTICAL parameters: f32 gradients XOR-code
+  All three produce BIT-IDENTICAL parameters: gradients XOR-code
   losslessly, every executor reduces in the engine's canonical combine
   order (delivered batch + ascending fold), and every mode shares the
   same jitted update. Asserted exactly in tests/test_train_loop.py.
+
+  ``grad_sync_dtype="bfloat16"`` turns on mixed-precision grad sync
+  (DESIGN.md §12): the memoized map gradients are rounded to bf16 ONCE
+  at the source, every wire ships them on the packed 16-bit codec lane
+  (half the bytes), and the shared update upcasts the synced gradient
+  to f32 against f32 master params/moments. The bitwise cross-mode
+  contract holds per lane because all three executors consume the SAME
+  bf16 bits and fold them in the same canonical order.
 """
 
 from __future__ import annotations
@@ -145,6 +153,7 @@ class CAMRTrainReport:
     losses: list = field(default_factory=list)
     mode: str = ""
     sync: dict = field(default_factory=dict)   # executor-reuse stats
+    grad_sync_dtype: str = "float32"           # shuffle payload dtype
 
 
 def _mean_losses(per_job: list) -> list[float]:
@@ -182,6 +191,15 @@ class MultiModelCAMRTrainer:
         equals it bit-for-bit (and takes the measured byte accounting
         from the engine trace). Off by default: the engine is the
         *oracle*, not the fast path.
+    grad_sync_dtype
+        Shuffle payload dtype: ``"float32"`` (default) or
+        ``"bfloat16"`` for mixed-precision grad sync — gradients are
+        rounded to bf16 once at the map memo, synced on the packed
+        16-bit codec lane at half the bytes-on-wire, and upcast to f32
+        for the master-copy update (DESIGN.md §12). ``None`` reads
+        ``cfg.grad_sync_dtype``. ``float16`` is rejected: raw LM
+        gradients overflow/underflow its 5-bit exponent without loss
+        scaling — use bfloat16 (f32-range exponent) instead.
 
     State layout: parameters, moments and synced gradients live as flat
     padded f32 vectors of ``Dpad = K * d_shard`` elements per job
@@ -195,8 +213,28 @@ class MultiModelCAMRTrainer:
                  lr: float = 1e-3, seed: int = 0, mesh=None,
                  axis_name: str = "camr", codec: str = "fused",
                  router: str = "all_to_all", use_kernels=None,
-                 failed=None, spmd_oracle: bool = False):
+                 failed=None, spmd_oracle: bool = False,
+                 grad_sync_dtype: str | None = None):
         self.cfg, self.q, self.k = cfg, q, k
+        gsd = (cfg.grad_sync_dtype if grad_sync_dtype is None
+               else grad_sync_dtype)
+        name = jnp.dtype(gsd).name
+        if name == "float16":
+            raise ValueError(
+                "grad_sync_dtype=float16 is unsafe for raw gradients: "
+                "the 5-bit exponent overflows above 65504 and flushes "
+                "below ~6e-5, and this trainer implements no loss "
+                "scaling. Use grad_sync_dtype='bfloat16' (same exponent "
+                "range as float32, same 2x wire savings) or 'float32'.")
+        if name not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"grad_sync_dtype must be float32 or bfloat16, got "
+                f"{name}")
+        self.grad_sync_dtype = name
+        #: numpy view of the sync dtype (ml_dtypes.bfloat16 rounds and
+        #: adds bit-identically to the XLA bf16 lane for normal values)
+        self._sync_np = np.dtype(np.float32 if name == "float32"
+                                 else "bfloat16")
         self.camr = CAMRConfig(q=q, k=k, gamma=1)
         J, K = self.camr.J, self.camr.K
         keys = jax.random.split(jax.random.PRNGKey(seed), J)
@@ -243,10 +281,13 @@ class MultiModelCAMRTrainer:
         def _apply(flat, opt, gsync):
             # gsync [K, J, d]: worker s holds shard s of every job's
             # summed gradient. Transpose/reshape are pure data movement;
-            # /N and AdamW are elementwise (+ the per-job clip norm) —
-            # ONE function for every sync mode, so cross-mode parameter
-            # bits can only diverge if the shuffles themselves do.
-            grads = jnp.transpose(gsync, (1, 0, 2)).reshape(J, Dpad) / N
+            # the astype upcasts a bf16-lane sync to the f32 master
+            # numerics (exact — a no-op on the f32 lane); /N and AdamW
+            # are elementwise (+ the per-job clip norm) — ONE function
+            # for every sync mode, so cross-mode parameter bits can
+            # only diverge if the shuffles themselves do.
+            grads = jnp.transpose(gsync, (1, 0, 2)).reshape(
+                J, Dpad).astype(jnp.float32) / N
             return jax.vmap(partial(adamw_update, lr=lr))(flat, grads, opt)
 
         self._apply = jax.jit(_apply)
@@ -263,7 +304,11 @@ class MultiModelCAMRTrainer:
                              {k: jnp.asarray(v) for k, v in batch.items()})
         self._last_loss[j][n] = float(loss)
         self.map_calls += 1
-        return np.asarray(g, np.float32).reshape(self.K, self.d_shard)
+        g = np.asarray(g, np.float32).reshape(self.K, self.d_shard)
+        # mixed precision: round ONCE at the memo source so every
+        # grad-sync wire consumes the SAME bf16 bits (ml_dtypes casts
+        # round-to-nearest-even, bit-identical to the XLA convert)
+        return g if self._sync_np == np.float32 else g.astype(self._sync_np)
 
     def _place(self, gsync):
         """Put a synced-gradient array where the update expects it: on
@@ -282,7 +327,7 @@ class MultiModelCAMRTrainer:
     def _assemble(self, results, migrate=None) -> np.ndarray:
         """Engine result dicts -> gsync [K, J, d] (pure data movement)."""
         J, K = self.camr.J, self.K
-        gs = np.empty((K, J, self.d_shard), np.float32)
+        gs = np.empty((K, J, self.d_shard), self._sync_np)
         for s in range(K):
             src = migrate(s) if migrate else s
             for j in range(J):
@@ -295,7 +340,7 @@ class MultiModelCAMRTrainer:
         stream = JobStream(failed=self.failed, pipeline=False)
         spec = JobSpec(self.camr, map_fn, datasets,
                        name=f"train-step{self.step}",
-                       value_dtype=np.float32)
+                       value_dtype=self._sync_np)
         results = stream.run([spec])[0]
         eng = stream.last_engines[0]
         report.loads = eng.measured_loads()
@@ -347,7 +392,7 @@ class MultiModelCAMRTrainer:
         K, k = self.K, self.k
         J_own = self.q ** (self.k - 2)
         pl = prog.placement
-        out = np.zeros((K, J_own, k - 1, K, self.d_shard), np.float32)
+        out = np.zeros((K, J_own, k - 1, K, self.d_shard), self._sync_np)
         for s in range(K):
             vals, ids = [], []
             for a in range(J_own):
@@ -394,7 +439,8 @@ class MultiModelCAMRTrainer:
                 "L_total_bus": L.camr_load(self.q, self.k),
                 "L_total_p2p": L.camr_load_p2p(self.q, self.k),
             }
-            report.bytes_total += camr_collective_bytes(plan)["camr_total"]
+            report.bytes_total += camr_collective_bytes(
+                plan, dtype=self._sync_np)["camr_total"]
         report.sync = stream.stats()
         return out
 
@@ -412,7 +458,8 @@ class MultiModelCAMRTrainer:
         if mode not in syncs:
             raise ValueError(f"unknown mode {mode!r}; choose from "
                              f"{sorted(syncs)}")
-        report = CAMRTrainReport(mode=mode)
+        report = CAMRTrainReport(mode=mode,
+                                 grad_sync_dtype=self.grad_sync_dtype)
         J, N = self.camr.J, self.camr.N
         for _ in range(steps):
             self._last_loss = [dict() for _ in range(J)]

@@ -222,24 +222,39 @@ def test_plan_validation():
 
 
 def test_codec_dtype_guard():
-    """bf16/f16 contributions fail AT ENTRY with an actionable message
-    (not a bare TypeError from _to_u32 deep inside the trace)."""
+    """Uncodable dtypes fail AT ENTRY with an actionable message (not a
+    bare TypeError from the wire packing deep inside the trace); the
+    16-bit floats are NOT rejected — they ride the packed codec lane
+    (DESIGN.md §12)."""
     import jax.numpy as jnp
+
+    from repro.core.collective import CODEC_DTYPES, check_codec_dtype
     plan = make_plan(2, 3, 8)
-    bad = jnp.zeros((plan.J_own, plan.k - 1, plan.K, plan.d),
-                    jnp.bfloat16)
-    with pytest.raises(TypeError, match="float32.*bfloat16|bfloat16"):
-        camr_shuffle(plan, bad, axis_name="camr")
+    # numpy f64 (jnp.zeros would silently truncate to f32 without x64)
+    bad = np.zeros((plan.J_own, plan.k - 1, plan.K, plan.d),
+                   np.float64)
     with pytest.raises(TypeError, match="astype"):
-        camr_shuffle(plan, bad.astype(jnp.float16), axis_name="camr")
+        camr_shuffle(plan, bad, axis_name="camr")
     # the guard names the entry point, so users see WHERE to cast
     with pytest.raises(TypeError, match="camr_shuffle"):
         camr_shuffle(plan, bad, axis_name="camr")
+    with pytest.raises(TypeError, match="int8"):
+        check_codec_dtype(jnp.int8, "camr_shuffle")
+    # bf16/f16 pass every entry guard (the packed 16-bit lane) — the
+    # stale advice to cast them UP to f32 would double bytes-on-wire
+    for name in ("bfloat16", "float16"):
+        assert name in CODEC_DTYPES
+        check_codec_dtype(jnp.dtype(name), "camr_shuffle")
     # ShuffleStream rejects uncodable waves at submit, never mid-flight
     stream = ShuffleStream(2, 3, 8, mesh=None)
-    wave = np.zeros((stream.K, 2, 2, stream.K, 8), np.float16)
+    wave = np.zeros((stream.K, 2, 2, stream.K, 8), np.float64)
     with pytest.raises(TypeError, match="ShuffleStream"):
         stream.submit(wave)
+    # ...and accepts a packed-lane wave (wave_batch=2: no dispatch, no
+    # mesh needed — this asserts the GUARD, not the execution)
+    stream16 = ShuffleStream(2, 3, 8, mesh=None, wave_batch=2)
+    stream16.submit(np.zeros((stream16.K, 2, 2, stream16.K, 8),
+                             jnp.bfloat16))
 
 
 def test_codec_validation():

@@ -262,15 +262,47 @@ def test_jobstream_mixed_dtype_raises_unless_declared():
         assert_results_equal(want, res)
 
 
-def test_jobstream_half_dtype_rejected_at_entry():
-    """f16/bf16 values can't take the 32-bit XOR codec: a declared
-    value_dtype fails at JobSpec construction, an undeclared one at the
-    first map call — both with an actionable cast hint, neither deep
-    inside a shuffle."""
+def test_jobstream_half_dtype_guard(monkeypatch):
+    """The entry guard consumes the codec's CODEC_DTYPES list: f16/bf16
+    waves are ACCEPTED (the packed 16-bit lane, DESIGN.md §12) and run
+    bit-identically to the serial engine oracle; sub-word INTEGER waves
+    keep riding the byte-level engine exactly as before this lane
+    existed; and if a half ever left CODEC_DTYPES the guard would trip
+    again — at JobSpec construction for a declared value_dtype, at the
+    first map call for an undeclared one — with an actionable cast
+    hint, never deep inside a shuffle."""
+    import ml_dtypes  # registers the numpy bfloat16 dtype
+
+    from repro.core import collective
+
     f32 = make_specs(2, 3, 1, seed=8)[0]
-    with pytest.raises(TypeError, match="float16.*float32|float32"):
-        JobSpec(f32.cfg, _identity_map, f32.datasets,
-                value_dtype=np.float16)
+
+    # bf16 wave: accepted, and bit-identical to the serial oracle
+    bf16 = np.dtype(ml_dtypes.bfloat16)
+    ds = [[sf.astype(np.float32).astype(bf16) for sf in job]
+          for job in f32.datasets]
+    spec16 = JobSpec(f32.cfg, _identity_map, ds, name="bf16wave",
+                     value_dtype=bf16)
+    got = JobStream().run([spec16])[0]
+    want = CAMREngine(f32.cfg, _identity_map).run(ds)
+    assert_results_equal(want, got)
+    assert all(v.dtype == bf16 for res in got for v in res.values())
+
+    # sub-word integers transport losslessly on the byte-XOR engine,
+    # same as before the packed lane existed (no silent narrowing)
+    i16 = [[(sf * 100).astype(np.int16) for sf in job]
+           for job in f32.datasets]
+    spec_i16 = JobSpec(f32.cfg, _identity_map, i16, name="i16wave",
+                       value_dtype=np.int16)
+    got_i = JobStream().run([spec_i16])[0]
+    assert_results_equal(CAMREngine(f32.cfg, _identity_map).run(i16),
+                         got_i)
+
+    # tripwire: a half REMOVED from CODEC_DTYPES fails fast again
+    monkeypatch.setattr(collective, "CODEC_DTYPES",
+                        ("float32", "uint32"))
+    with pytest.raises(TypeError, match="astype"):
+        JobSpec(f32.cfg, _identity_map, ds, value_dtype=np.float16)
 
     def half_map(job, sf):
         return np.zeros((f32.cfg.num_functions(), 4), np.float16)

@@ -116,6 +116,84 @@ def test_grad_sync_modes_bit_identical():
 
 
 # --------------------------------------------------------------------- #
+# mixed-precision grad sync: bf16 shuffle payload, f32 master params
+# (DESIGN.md §12) — the bit-identity contract holds per lane
+# --------------------------------------------------------------------- #
+_RUN_IDENTITY_BF16 = textwrap.dedent("""
+    import numpy as np
+    import ml_dtypes
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import ShardedTokenPipeline
+    from repro.runtime.train_loop import MultiModelCAMRTrainer
+
+    cfg = reduced(get_config("granite_3_2b")).replace(
+        n_layers=2, vocab=64, d_model=32, d_ff=64, n_heads=2,
+        n_kv_heads=1, head_dim=16, loss_chunk=8)
+    pipe = ShardedTokenPipeline(vocab=64, seq_len=8, global_batch=2)
+
+    reports, trainers = {}, {}
+    for mode in ("camr", "uncoded", "camr_spmd"):
+        tr = MultiModelCAMRTrainer(cfg, q=2, k=3, seed=0,
+                                   grad_sync_dtype="bfloat16",
+                                   spmd_oracle=(mode == "camr_spmd"))
+        reports[mode] = tr.train_steps(pipe, 2, mode=mode)
+        trainers[mode] = tr
+
+    ref_flat = np.asarray(trainers["camr"].flat)
+    ref_losses = np.asarray(reports["camr"].losses)
+    assert np.isfinite(ref_losses).all()
+    for mode in ("uncoded", "camr_spmd"):
+        assert reports[mode].grad_sync_dtype == "bfloat16"
+        np.testing.assert_array_equal(
+            np.asarray(trainers[mode].flat), ref_flat,
+            err_msg=f"{mode} parameters diverged on the bf16 lane")
+        np.testing.assert_array_equal(
+            np.asarray(reports[mode].losses), ref_losses,
+            err_msg=f"{mode} losses diverged on the bf16 lane")
+    # master params stay f32; the synced payload was bf16
+    assert np.asarray(trainers["camr"].flat).dtype == np.float32
+
+    # a degraded bf16 survivor-set step is recovery-exact too
+    td = MultiModelCAMRTrainer(cfg, q=2, k=3, seed=0, failed={0},
+                               grad_sync_dtype="bfloat16")
+    rd = td.train_steps(pipe, 2, mode="camr")
+    np.testing.assert_array_equal(np.asarray(td.flat), ref_flat)
+
+    # the packed lane ships ~half the engine-measured shuffle bytes of
+    # the f32 lane (exactly half here: widths need no pad words)
+    t32 = MultiModelCAMRTrainer(cfg, q=2, k=3, seed=0)
+    r32 = t32.train_steps(pipe, 2, mode="camr")
+    assert reports["camr"].bytes_total * 2 == r32.bytes_total, (
+        reports["camr"].bytes_total, r32.bytes_total)
+
+    # ...and the trajectories genuinely differ across lanes (bf16
+    # rounding is real — the identity contract is PER lane)
+    assert not np.array_equal(np.asarray(t32.flat), ref_flat)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_grad_sync_bf16_modes_bit_identical():
+    out = _run_subprocess(_RUN_IDENTITY_BF16, ndev=6)
+    assert "OK" in out
+
+
+def test_grad_sync_dtype_validation():
+    cfg = _tiny_cfg()
+    with pytest.raises(ValueError, match="loss scaling"):
+        MultiModelCAMRTrainer(cfg, q=2, k=3, grad_sync_dtype="float16")
+    with pytest.raises(ValueError, match="float32 or bfloat16"):
+        MultiModelCAMRTrainer(cfg, q=2, k=3, grad_sync_dtype="int8")
+    # the config field (previously dead) is the default source
+    tr = MultiModelCAMRTrainer(cfg.replace(grad_sync_dtype="bfloat16"),
+                               q=2, k=3)
+    assert tr.grad_sync_dtype == "bfloat16"
+    tr32 = MultiModelCAMRTrainer(cfg, q=2, k=3)
+    assert tr32.grad_sync_dtype == "float32"
+
+
+# --------------------------------------------------------------------- #
 # satellite: the gradient memo is keyed by (job, subfile_index)
 # --------------------------------------------------------------------- #
 @pytest.mark.slow
