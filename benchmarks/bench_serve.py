@@ -1,0 +1,196 @@
+"""Continuous-batching serving vs the legacy host loop (DESIGN.md §13).
+
+Acceptance numbers for the serving path: a stream of ragged requests is
+decoded by
+
+* legacy — :func:`repro.runtime.serve.generate`, one host round-trip
+  per token, one request at a time (the static baseline a naive server
+  runs for ragged prompts);
+* engine — :class:`DecodeEngine` + :class:`ServeStream`: the jitted
+  ``lax.while_loop`` wave decode over paged KV slots, admission and
+  eviction between waves, prefill overlapped with decode.
+
+Before any time is reported the two lanes are gated on TOKEN parity
+(the engine's greedy tokens must equal the per-request host-loop
+oracle's, request by request) and on the zero-recompilation admission
+contract (a second stream run traces nothing). The engine must then win
+on tokens/sec on every config — a hard gate under
+``CAMR_BENCH_STRICT=1`` (CPU wall clocks are noisy; it is a stderr
+warning otherwise, and ``--smoke`` configs are too tiny for a
+meaningful wall-clock gate at all, matching bench_train's policy).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.runtime.serve import (DecodeEngine, Request, ServeStream,
+                                 generate, trace_total)
+
+# (arch, n_requests, max_prompt, max_new, slots, page_size, wave_len)
+CONFIGS = [
+    ("gemma2_2b", 12, 12, 16, 4, 8, 8),
+    ("granite_3_2b", 12, 12, 16, 4, 8, 8),
+]
+SMOKE_CONFIGS = [
+    ("gemma2_2b", 4, 6, 4, 2, 4, 4),
+]
+
+
+def _requests(cfg, n, max_prompt, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        t = int(rng.integers(1, max_prompt + 1))
+        out.append(Request(
+            prompt=rng.integers(0, cfg.vocab, (t,)).astype(np.int32),
+            max_new=max_new, seed=i))
+    return out
+
+
+def _legacy_lane(cfg, params, reqs):
+    """Sequential host-loop decode; returns (gen_tokens, step_times)."""
+    outs, lat = [], []
+    for r in reqs:
+        res = generate(cfg, params, np.asarray(r.prompt)[None],
+                       max_new=r.max_new, eos=r.eos, seed=r.seed)
+        outs.append(res.tokens[0, len(r.prompt):])
+        lat.extend(res.step_times)
+    return outs, lat
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def bench_config(arch, n, max_prompt, max_new, slots, page_size, wave):
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg, n, max_prompt, max_new)
+    total_new = n * max_new
+
+    def mk_stream():
+        eng = DecodeEngine(cfg, params, slots=slots,
+                           page_size=page_size,
+                           max_ctx=max_prompt + max_new,
+                           max_new_cap=max_new, name=arch)
+        return eng, ServeStream(eng, wave_len=wave)
+
+    # -- gate 1: token parity vs the host-loop oracle (also warms both
+    #    lanes' executables) ------------------------------------------ #
+    oracle, legacy_lat = _legacy_lane(cfg, params, reqs)
+    eng, stream = mk_stream()
+    results = stream.run(reqs)
+    for want, res in zip(oracle, results):
+        got = res.generated[:len(want)]
+        assert np.array_equal(want, got), (
+            f"{arch}: engine tokens diverge from the host-loop oracle "
+            f"(plen={res.prompt_len}): {want} != {got}")
+    eng.pool.check_invariants()
+
+    # -- gate 2: steady-state admission pays zero recompilations ------ #
+    before = trace_total()
+    stream.run(reqs)
+    assert trace_total() == before, (
+        f"{arch}: second stream run recompiled "
+        f"({trace_total() - before} traces)")
+
+    # -- timed lanes -------------------------------------------------- #
+    t0 = time.perf_counter()
+    _, legacy_lat = _legacy_lane(cfg, params, reqs)
+    legacy_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    results = stream.run(reqs)
+    engine_s = time.perf_counter() - t0
+    rep = stream.last_report
+    emitted = sum(r.emitted for r in results)
+    step_lat = [s[1] / max(1, s[2]) for s in rep.wave_stats]
+
+    return {
+        "arch": arch,
+        "legacy_toks": total_new / legacy_s,
+        "engine_toks": emitted / engine_s,
+        "speedup": (emitted / engine_s) / (total_new / legacy_s),
+        "legacy_p50_ms": 1e3 * _pct(legacy_lat, 50),
+        "legacy_p99_ms": 1e3 * _pct(legacy_lat, 99),
+        "engine_p50_ms": 1e3 * _pct(step_lat, 50),
+        "engine_p99_ms": 1e3 * _pct(step_lat, 99),
+        "occupancy": rep.occupancy,
+        "waves": rep.waves,
+        "engine_us_per_tok": 1e6 * engine_s / max(1, emitted),
+        "config": {"arch": arch, "requests": n, "max_prompt": max_prompt,
+                   "max_new": max_new, "slots": slots,
+                   "page_size": page_size, "wave_len": wave},
+    }
+
+
+def _bench_rows(smoke: bool) -> list:
+    rows, losers = [], []
+    for spec in (SMOKE_CONFIGS if smoke else CONFIGS):
+        r = bench_config(*spec)
+        if r["speedup"] <= 1.0:
+            losers.append(r["arch"])
+        rows.append({
+            "name": f"serve_{r['arch']}",
+            "us_per_call": r["engine_us_per_tok"],
+            "derived": (f"legacy={r['legacy_toks']:.0f}tok/s "
+                        f"engine={r['engine_toks']:.0f}tok/s "
+                        f"speedup={r['speedup']:.1f}x "
+                        f"p50={r['engine_p50_ms']:.2f}ms "
+                        f"p99={r['engine_p99_ms']:.2f}ms "
+                        f"(legacy p50={r['legacy_p50_ms']:.2f} "
+                        f"p99={r['legacy_p99_ms']:.2f}) "
+                        f"occ={r['occupancy']:.2f} token-parity ok"),
+            "config": r["config"],
+            "median_us": r["engine_us_per_tok"],
+            "legacy_tok_s": r["legacy_toks"],
+            "engine_tok_s": r["engine_toks"],
+            "speedup": r["speedup"],
+            "engine_p50_ms": r["engine_p50_ms"],
+            "engine_p99_ms": r["engine_p99_ms"],
+            "occupancy": r["occupancy"],
+        })
+    # --smoke configs are too tiny for a meaningful wall-clock gate
+    # (same policy as bench_train); parity + recompile gates run above
+    if losers and not smoke:
+        msg = ("continuous-batching engine must beat the legacy host "
+               f"loop on tokens/sec on every config; lost on {losers}")
+        if os.environ.get("CAMR_BENCH_STRICT") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING (noisy host?): {msg}", file=sys.stderr)
+    return rows
+
+
+def rows(smoke: bool | None = None):
+    """Suite entry point for benchmarks/run.py."""
+    if smoke is None:
+        smoke = os.environ.get("CAMR_BENCH_SMOKE", "") == "1"
+    return _bench_rows(smoke)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config, few requests (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in _bench_rows(args.smoke):
+        print(f"{row['name']},{row['us_per_call']:.1f},"
+              f"\"{row['derived']}\"", flush=True)
+    print("# engine tokens verified equal to the host-loop oracle and "
+          "admission verified recompile-free before timing",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

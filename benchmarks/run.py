@@ -14,6 +14,7 @@ Tables:
   schedule   — ShuffleProgram lowering + batched-vs-looped shuffle time
   jobstream  — pipelined multi-wave stream vs serial engine loop (§9)
   train      — SPMD vs interpreter gradient sync (training path, §11)
+  serve      — continuous-batching engine vs legacy host loop (§13)
   roofline   — §Roofline summary from the dry-run artifacts (if present)
 
 ``--json PATH`` additionally writes machine-readable results: every row
@@ -70,6 +71,8 @@ SUITES = {
     "jobstream": lambda: __import__("benchmarks.bench_jobstream",
                                     fromlist=["rows"]).rows(),
     "train": lambda: __import__("benchmarks.bench_train",
+                                fromlist=["rows"]).rows(),
+    "serve": lambda: __import__("benchmarks.bench_serve",
                                 fromlist=["rows"]).rows(),
     "roofline": _roofline_rows,
 }

@@ -69,6 +69,8 @@ __all__ = [
     "lower_degraded",
     "ScheduleCache",
     "SCHEDULE_CACHE",
+    "ExecCache",
+    "EXEC_CACHE",
     "payload_words",
     "pack_payload",
     "unpack_payload",
@@ -833,3 +835,63 @@ class ScheduleCache:
 
 #: Module-level default — all engines/plans share one schedule cache.
 SCHEDULE_CACHE = ScheduleCache()
+
+
+class ExecCache:
+    """Process-wide cache of built (usually jitted) executables, keyed
+    by VALUE — the serving sibling of :class:`ScheduleCache`
+    (DESIGN.md §13).
+
+    A ``ScheduleCache`` entry is a lowered *data plan*; an ``ExecCache``
+    entry is a compiled *callable* (or a tuple of them): the jitted
+    decode-wave ``lax.while_loop``, prefill/admit executables, the
+    legacy serving step pair. Keys are caller-chosen tuples of
+    hashables — the convention is
+    ``(kind, cfg, *shape_signature)``, e.g.
+    ``("serve_wave", cfg, slots, pages, page_size, ...)`` — so every
+    input that changes the traced computation is in the key and entries
+    never go stale. Same LRU bound + lock discipline as the schedule
+    cache (the serving front door builds executables from its prefill
+    prefetch thread).
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build):
+        """Return the cached executable for ``key``; on a miss, call
+        ``build()`` (under the lock — one build per key) and cache the
+        result."""
+        with self._lock:
+            got = self._entries.get(key)
+            if got is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return got
+            self.misses += 1
+            got = build()
+            self._entries[key] = got
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+            return got
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(hits=self.hits, misses=self.misses,
+                        entries=len(self._entries))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+#: Module-level default — serving entry points share one executable
+#: cache (a second ``generate``/engine over the same config re-uses the
+#: compiled closures instead of retracing).
+EXEC_CACHE = ExecCache()

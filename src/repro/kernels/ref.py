@@ -83,6 +83,9 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     ``softcap``: gemma2-style logit soft-capping: cap*tanh(x/cap).
     ``valid_len``: (traced) number of valid keys — queries are aligned so
     the last query sits at position valid_len-1 (partial KV-cache decode).
+    A ``[B]`` vector gives each batch row its own valid length (ragged
+    continuous-batching decode, DESIGN.md §13); scalar/None keep the
+    original shared-length mask.
     """
     B, Hq, Tq, D = q.shape
     Hkv = k.shape[1]
@@ -95,6 +98,20 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
     Tk = k.shape[2]
+    if valid_len is not None and jnp.ndim(valid_len) == 1:
+        # per-row valid lengths: mask [B, Tq, Tk], broadcast over heads
+        endb = jnp.asarray(valid_len)[:, None, None]         # [B, 1, 1]
+        qpos = jnp.arange(Tq)[None, :, None] + (endb - Tq)   # [B, Tq, 1]
+        kpos = jnp.arange(Tk)[None, None, :]                 # [1, 1, Tk]
+        mask = kpos < endb
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+        return out.reshape(B, Hq, Tq, D).astype(q.dtype)
     end = Tk if valid_len is None else valid_len
     qpos = jnp.arange(Tq)[:, None] + (end - Tq)  # right-aligned (decode ok)
     kpos = jnp.arange(Tk)[None, :]

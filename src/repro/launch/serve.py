@@ -1,8 +1,22 @@
-"""Serving launcher: batched generation with a reduced config on CPU or
-the full config on a real pod.
+"""Serving launcher — the multi-tenant front door.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b \
-        --reduced --batch 4 --max-new 16
+Default path is the continuous-batching :class:`DecodeEngine` +
+:class:`ServeStream` (one engine per arch, requests interleaved across
+waves); ``--legacy`` falls back to the host-loop ``generate`` path,
+which also serves frontend (vit/audio) and enc-dec configs the engine
+does not support.
+
+    # one model, engine path
+    PYTHONPATH=src python -m repro.launch.serve --archs gemma2_2b \
+        --reduced --requests 8 --max-new 16
+
+    # multi-tenant: two models share the stream
+    PYTHONPATH=src python -m repro.launch.serve \
+        --archs gemma2_2b,granite_3_2b --reduced --requests 8
+
+    # legacy static-batch host loop
+    PYTHONPATH=src python -m repro.launch.serve --archs gemma2_2b \
+        --reduced --legacy --requests 4
 """
 
 from __future__ import annotations
@@ -16,42 +30,112 @@ import jax
 
 from repro.configs import ARCHS, get_config, reduced
 from repro.models import lm
-from repro.runtime.serve import generate
+from repro.runtime.serve import (DecodeEngine, Request, ServeStream,
+                                 generate)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--archs", required=True,
+                    help="comma-separated arch names (multi-tenant when "
+                         "more than one)")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per arch")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length (ragged: 1..prompt-len)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos", type=int, default=None)
+    ap.add_argument("--legacy", action="store_true",
+                    help="host-loop generate() instead of the engine")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--wave", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    names = [a.strip() for a in args.archs.split(",") if a.strip()]
+    for a in names:
+        if a not in ARCHS:
+            ap.error(f"unknown arch {a!r} (choose from {ARCHS})")
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    extras = {}
-    if cfg.frontend == "vit":
-        extras["patches"] = rng.standard_normal(
-            (args.batch, cfg.frontend_len, cfg.frontend_dim)).astype(
-            np.float32)
-    if cfg.frontend == "audio":
-        extras["frames"] = rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.frontend_dim)).astype(
-            np.float32)
-    t0 = time.time()
-    res = generate(cfg, params, prompts, max_new=args.max_new,
-                   temperature=args.temperature, extras=extras or None)
-    dt = time.time() - t0
-    print(f"generated {res.steps} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s ({res.steps * args.batch / dt:.1f} tok/s)")
-    print(res.tokens[:, args.prompt_len:])
+
+    cfgs, params = {}, {}
+    for a in names:
+        cfg = get_config(a)
+        cfgs[a] = reduced(cfg) if args.reduced else cfg
+        params[a] = lm.init_params(cfgs[a], jax.random.PRNGKey(0))
+
+    def prompts_for(a):
+        cfg = cfgs[a]
+        out = []
+        for _ in range(args.requests):
+            T = int(rng.integers(1, args.prompt_len + 1))
+            out.append(rng.integers(0, cfg.vocab, (T,)).astype(np.int32))
+        return out
+
+    if args.legacy:
+        total = tot_time = 0
+        for a in names:
+            cfg = cfgs[a]
+            extras = {}
+            if cfg.frontend == "vit":
+                extras["patches"] = rng.standard_normal(
+                    (1, cfg.frontend_len, cfg.frontend_dim)).astype(
+                    np.float32)
+            if cfg.frontend == "audio":
+                extras["frames"] = rng.standard_normal(
+                    (1, args.prompt_len, cfg.frontend_dim)).astype(
+                    np.float32)
+            lat = []
+            t0 = time.perf_counter()
+            for p in prompts_for(a):
+                res = generate(cfg, params[a], p[None],
+                               max_new=args.max_new, eos=args.eos,
+                               temperature=args.temperature,
+                               extras=extras or None)
+                total += res.steps
+                lat.extend(res.step_times)
+            dt = time.perf_counter() - t0
+            tot_time += dt
+            print(f"{a}: {args.requests} reqs (legacy host loop) "
+                  f"p50={1e3 * _percentile(lat, 50):.2f}ms "
+                  f"p99={1e3 * _percentile(lat, 99):.2f}ms")
+        print(f"legacy: {total} tokens in {tot_time:.2f}s "
+              f"({total / tot_time:.1f} tok/s)")
+        return
+
+    engines = {}
+    for a in names:
+        if cfgs[a].family == "encdec" or cfgs[a].frontend:
+            ap.error(f"{a}: enc-dec/frontend archs need --legacy")
+        max_ctx = args.prompt_len + args.max_new
+        engines[a] = DecodeEngine(
+            cfgs[a], params[a], slots=args.slots,
+            page_size=args.page_size, max_ctx=max_ctx,
+            max_new_cap=args.max_new, name=a)
+    stream = ServeStream(engines, wave_len=args.wave)
+    jobs = [(a, Request(prompt=p, max_new=args.max_new, eos=args.eos,
+                        temperature=args.temperature, seed=i))
+            for a in names for i, p in enumerate(prompts_for(a))]
+    t0 = time.perf_counter()
+    results = stream.run(jobs)
+    dt = time.perf_counter() - t0
+    rep = stream.last_report
+    toks = sum(r.emitted for r in results)
+    per_tok = [s[1] / max(1, s[2]) for s in rep.wave_stats]
+    print(f"engine: {len(results)} reqs / {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s), {rep.waves} waves, "
+          f"occupancy {rep.occupancy:.2f}, "
+          f"step p50={1e3 * _percentile(per_tok, 50):.2f}ms "
+          f"p99={1e3 * _percentile(per_tok, 99):.2f}ms, "
+          f"traces during run: {rep.traces}")
+    for r in results[:4]:
+        print(f"  [{r.model}#{r.index}] +{r.emitted}: {r.generated}")
 
 
 if __name__ == "__main__":

@@ -108,7 +108,31 @@ def attention_block(p, x, positions, cfg, *, window=None, softcap=None,
 
     new_cache = None
     valid_len = None
-    if cache is not None:
+    if cache is not None and "pages" in cache:
+        # paged slot-indexed layout (serving, DESIGN.md §13): k/v live in
+        # a shared page pool [P, Hkv, page, Dh]; ``pages`` [B, npp] maps
+        # each slot's logical pages to physical ones; ``cache_index`` is
+        # the per-row logical write position (-1 = finished row, its
+        # write is routed to the reserved trash page 0 and its keys are
+        # fully masked via valid_len 0).
+        assert T == 1, "paged cache entries are decode-only (T == 1)"
+        pt = cache["pages"]                       # [B, npp] int32
+        ps = cache["k"].shape[2]                  # page size
+        npp = pt.shape[1]
+        rows = jnp.arange(B)
+        idx = cache_index
+        safe = jnp.maximum(idx, 0)
+        phys = jnp.where(idx < 0, 0, pt[rows, safe // ps])   # [B]
+        off = safe % ps                                       # [B]
+        kc = cache["k"].at[phys, :, off].set(k[:, :, 0])
+        vc = cache["v"].at[phys, :, off].set(v[:, :, 0])
+        new_cache = {"k": kc, "v": vc, "pages": pt}
+        # gather the slot's pages back into logical order: the dense
+        # per-row view the masked attention below consumes
+        k = kc[pt].transpose(0, 2, 1, 3, 4).reshape(B, hkv, npp * ps, dh)
+        v = vc[pt].transpose(0, 2, 1, 3, 4).reshape(B, hkv, npp * ps, dh)
+        valid_len = idx + T                       # [B]; -1 -> all masked
+    elif cache is not None:
         # write this step's k/v at cache_index; keep the updated cache in
         # its sharded layout (a resharded DUS would replicate it)
         from repro.launch.partitioning import constrain as _con

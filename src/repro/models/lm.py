@@ -11,6 +11,15 @@ over the ``repeats`` axis and optional per-unit remat. Entry points:
     init_cache(cfg, B, T)                  -> zeroed cache pytree
     decode_step(cfg, params, cache, tokens, cache_index)
                                            -> (logits, new_cache)
+    init_paged_cache(cfg, slots, n_pages, page_size, pages_per_slot)
+                                           -> paged cache (DESIGN.md §13)
+    admit_prefill(cfg, paged, prefill_cache, pages, slot)
+                                           -> paged cache with the slot
+                                              loaded from a B=1 prefill
+
+``cache_index`` may be a scalar (dense cache, uniform position) or a
+per-row ``[B]`` vector (paged cache, ragged positions; ``-1`` routes a
+finished row's writes to the trash page).
 """
 
 from __future__ import annotations
@@ -380,6 +389,78 @@ def init_cache(cfg: ModelConfig, B: int, T: int):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, slots: int, n_pages: int,
+                     page_size: int, pages_per_slot: int):
+    """Zeroed paged decode cache (DESIGN.md §13).
+
+    Attention k/v live in ONE physical page pool ``[R, P, Hkv, page,
+    Dh]`` shared by every batch slot; ``pages`` ``[R, slots, npp]`` is
+    the per-slot page table (replicated over the scanned layer axis so
+    the whole pytree scans with ``lax.scan``; int32, ~nothing).
+    Physical page 0 is reserved as the trash page — finished rows write
+    there and the allocator never hands it out. SSM state is recurrent
+    (no sequence axis), so it stays a per-slot row ``[R, slots, ...]``
+    and is simply overwritten at admission.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "paged decode does not support enc-dec cross caches; use "
+            "the legacy generate() path")
+    R, hkv, hd = cfg.repeats, cfg.n_kv_heads, cfg.hd
+    cache = {}
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        if kind in ("attn", "local", "shared_attn"):
+            # NOTE: each layer gets its OWN page-table buffer — sharing
+            # one array across layers would put the same buffer in the
+            # pytree twice and break jit argument donation
+            cache[name] = {"self": {
+                "k": jnp.zeros((R, n_pages, hkv, page_size, hd),
+                               cfg.jdtype),
+                "v": jnp.zeros((R, n_pages, hkv, page_size, hd),
+                               cfg.jdtype),
+                "pages": jnp.zeros((R, slots, pages_per_slot),
+                                   jnp.int32)}}
+        elif kind == "ssm":
+            P = cfg.ssm_d_inner // cfg.ssm_heads
+            cache[name] = {"state": jnp.zeros(
+                (R, slots, cfg.ssm_heads, cfg.ssm_state, P), jnp.float32)}
+    return cache
+
+
+def admit_prefill(cfg: ModelConfig, paged, prefill_cache, pages, slot):
+    """Scatter a ``B=1`` prefill cache into the paged pool (DESIGN.md
+    §13).
+
+    ``prefill_cache`` comes from :func:`prefill` with
+    ``max_len = n * page_size`` (so its sequence axis splits into whole
+    pages); ``pages`` is the slot's FULL page-table row ``[npp]`` whose
+    first ``n`` entries are the allocated physical pages (the rest point
+    at the trash page 0 and are never valid under the length mask);
+    ``slot`` is the (traced) batch-slot index. Pure data movement —
+    every cached byte lands bit-identical in its page.
+    """
+    new = {}
+    for name, kind in zip(slot_names(cfg), cfg.pattern):
+        if kind in ("attn", "local", "shared_attn"):
+            ent, src = paged[name]["self"], prefill_cache[name]["self"]
+            ps = ent["k"].shape[3]
+            R, _, hkv, Tp, hd = src["k"].shape
+            assert Tp % ps == 0, (Tp, ps)
+            npg = Tp // ps
+            out = {}
+            for key in ("k", "v"):
+                blocks = src[key][:, 0].reshape(R, hkv, npg, ps, hd)
+                blocks = blocks.transpose(0, 2, 1, 3, 4)
+                out[key] = ent[key].at[:, pages[:npg]].set(blocks)
+            out["pages"] = ent["pages"].at[:, slot].set(pages)
+            new[name] = {"self": out}
+        elif kind == "ssm":
+            st = paged[name]["state"].at[:, slot].set(
+                prefill_cache[name]["state"][:, 0])
+            new[name] = {"state": st}
+    return new
+
+
 def cache_specs(cfg: ModelConfig):
     """Logical axes for the cache: batch over data, cache SEQUENCE over
     model (flash-decode style — kv-head counts are often < the model
@@ -456,13 +537,24 @@ def _prefill_scan(cfg, params, x, positions, cache, memory):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, cache_index):
-    """One serving step: tokens [B, 1] + cache -> logits [B, 1, V]."""
+    """One serving step: tokens [B, 1] + cache -> logits [B, 1, V].
+
+    ``cache_index`` is the write/attend position: a scalar (whole batch
+    at one position — the classic right-aligned decode) or a ``[B]``
+    vector of per-row positions for ragged continuous batching over a
+    paged cache (DESIGN.md §13; -1 marks a finished/empty row whose
+    write is routed to the trash page and whose keys are fully masked).
+    """
     x = jnp.take(params["embed"], tokens, axis=0)
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     B = x.shape[0]
-    positions = jnp.full((B, 1), cache_index, jnp.int32)
+    ci = jnp.asarray(cache_index, jnp.int32)
+    if ci.ndim == 1:
+        positions = jnp.maximum(ci, 0)[:, None]          # [B, 1]
+    else:
+        positions = jnp.full((B, 1), ci, jnp.int32)
     x, new_cache, _ = _scan_units(cfg, params, x, positions, cache=cache,
-                                  cache_index=cache_index, mode="decode")
+                                  cache_index=ci, mode="decode")
     x = L.rms_norm(x, params["norm_f"])
     return _logits(cfg, params, x), new_cache

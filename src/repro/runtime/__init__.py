@@ -3,7 +3,11 @@ the pipelined multi-wave JobStream scheduler (DESIGN.md §9)."""
 
 from .train_loop import Trainer, MultiModelCAMRTrainer
 from .jobstream import JobSpec, JobStream, StreamReport
+from .serve import (DecodeEngine, GenerationResult, PagePool, Request,
+                    ServeResult, ServeStream, ServeReport, generate)
 from . import fault, serve
 
 __all__ = ["Trainer", "MultiModelCAMRTrainer", "JobSpec", "JobStream",
-           "StreamReport", "fault", "serve"]
+           "StreamReport", "fault", "serve", "generate",
+           "GenerationResult", "Request", "ServeResult", "PagePool",
+           "DecodeEngine", "ServeStream", "ServeReport"]

@@ -1,56 +1,141 @@
-"""Batched serving loop: prefill + greedy/temperature decode.
+"""Serving runtime: legacy host-loop generate + the device-resident
+continuous-batching decode engine (DESIGN.md §13).
 
-Production shape: requests arrive as (prompt, max_new) pairs; the loop
-prefills the batch once, then iterates decode_step with per-sequence
-stop handling. (The dry-run serve_step in launch/dryrun.py lowers a
-single decode step against the full-length cache; this module is the
-host-side loop that drives it.)
+Two execution paths share the model code in :mod:`repro.models.lm`:
+
+* :func:`generate` — the HOST loop: one Python iteration and one
+  device->host sync per token. After this module's fixes it is
+  deterministic past ``eos`` (finished rows emit the eos/pad id, not
+  sampled garbage) and compiles its prefill/step closures ONCE per
+  ``(cfg, max_len)`` via the process-wide
+  :data:`~repro.core.schedule.EXEC_CACHE` instead of on every call.
+  It is the bit-level ORACLE the engine is tested against.
+* :class:`DecodeEngine` + :class:`ServeStream` — the production shape:
+  the token loop is ONE jitted ``lax.while_loop`` carrying
+  ``(cache, logits, lengths, done, step, ...)`` on device, KV lives in
+  fixed-size paged slots shared by all sequences, and the stream
+  admits/evicts requests *between* waves (continuous batching) while
+  prefilling incoming requests on a prefetch thread — the same
+  double-buffer discipline as :class:`repro.runtime.jobstream.JobStream`
+  uses for map vs shuffle. One host round-trip per WAVE, not per token.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from collections import Counter, deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.configs import ModelConfig
+from repro.core.schedule import EXEC_CACHE
 from repro.models import lm
 
-__all__ = ["GenerationResult", "generate"]
+__all__ = ["GenerationResult", "generate", "Request", "ServeResult",
+           "PagePool", "DecodeEngine", "ServeStream", "ServeReport",
+           "trace_total", "TRACE_COUNTS"]
 
 
+# --------------------------------------------------------------------- #
+# compilation accounting
+# --------------------------------------------------------------------- #
+#: traces per executable-cache key. A bump happens when jax TRACES the
+#: wrapped python function — i.e. on every (re)compilation. Steady-state
+#: serving (and a second ``generate`` call of the same shape) must not
+#: move these counters; tests and the bench recompile gate assert on
+#: :func:`trace_total`.
+TRACE_COUNTS: Counter = Counter()
+
+
+def trace_total() -> int:
+    """Total number of jit traces paid by the serving entry points."""
+    return sum(TRACE_COUNTS.values())
+
+
+def _counted_jit(key, fn, **jit_kw):
+    """``jax.jit(fn)`` that bumps ``TRACE_COUNTS[key]`` at trace time."""
+
+    def traced(*args, **kwargs):
+        TRACE_COUNTS[key] += 1
+        return fn(*args, **kwargs)
+
+    return jax.jit(traced, **jit_kw)
+
+
+# --------------------------------------------------------------------- #
+# legacy host loop (the oracle)
+# --------------------------------------------------------------------- #
 @dataclass
 class GenerationResult:
     tokens: np.ndarray          # [B, T_out]
     steps: int
     prefill_len: int
+    #: host-loop wall time per emitted token (the per-token latency the
+    #: serving bench samples p50/p99 from)
+    step_times: np.ndarray | None = None
+
+
+def _legacy_fns(cfg: ModelConfig, max_len: int):
+    """Jitted (prefill, decode_step) pair for ``(cfg, max_len)``.
+
+    Hoisted out of :func:`generate` into the process-wide
+    :data:`~repro.core.schedule.EXEC_CACHE`: the seed implementation
+    built ``jax.jit(lambda ...)`` closures inside the function body, so
+    EVERY call retraced and recompiled both.
+    """
+    key = ("serve_legacy", cfg, max_len)
+
+    def build():
+        def prefill_fn(p, b):
+            TRACE_COUNTS[key] += 1
+            return lm.prefill(cfg, p, b, max_len=max_len)
+
+        def step_fn(p, c, t, i):
+            TRACE_COUNTS[key] += 1
+            return lm.decode_step(cfg, p, c, t, i)
+
+        return jax.jit(prefill_fn), jax.jit(step_fn)
+
+    return EXEC_CACHE.get(key, build)
 
 
 def generate(cfg: ModelConfig, params, prompts: np.ndarray, *,
              max_new: int = 32, eos: int | None = None,
              temperature: float = 0.0, seed: int = 0,
-             extras: dict | None = None) -> GenerationResult:
+             extras: dict | None = None,
+             pad: int | None = None) -> GenerationResult:
     """prompts: [B, T_prompt] int32 (right-aligned, no padding support
-    needed for the examples). Greedy when temperature == 0."""
+    needed for the examples). Greedy when temperature == 0.
+
+    Stop handling is deterministic: once a row has emitted ``eos``,
+    every later column of that row is ``pad`` (default: the eos id
+    itself) — never a sampled token. This fixed behavior is the oracle
+    :class:`DecodeEngine` is tested against.
+    """
     B, T = prompts.shape
     max_len = T + max_new
     batch = {"tokens": jnp.asarray(prompts)}
     if extras:
         batch.update({k: jnp.asarray(v) for k, v in extras.items()})
 
-    prefill = jax.jit(lambda p, b: lm.prefill(cfg, p, b, max_len=max_len))
-    step_fn = jax.jit(
-        lambda p, c, t, i: lm.decode_step(cfg, p, c, t, i))
+    prefill_fn, step_fn = _legacy_fns(cfg, max_len)
 
-    logits, cache = prefill(params, batch)
+    logits, cache = prefill_fn(params, batch)
     key = jax.random.PRNGKey(seed)
     out = [np.asarray(prompts)]
     done = np.zeros(B, bool)
-    cur = None
+    fill = np.int32(pad if pad is not None else (eos if eos is not None
+                                                 else 0))
+    times: list[float] = []
     for i in range(max_new):
+        t0 = time.perf_counter()
         lg = logits[:, -1, :cfg.vocab]       # drop vocab padding
         if temperature > 0:
             key, sub = jax.random.split(key)
@@ -58,12 +143,496 @@ def generate(cfg: ModelConfig, params, prompts: np.ndarray, *,
         else:
             nxt = jnp.argmax(lg, axis=-1)
         cur = np.asarray(nxt, np.int32)[:, None]
-        out.append(cur)
         if eos is not None:
+            # finished rows emit the pad/eos id forever (deterministic
+            # post-stop tail), never the sampled garbage
+            cur = np.where(done[:, None], fill, cur)
+            out.append(cur)
             done |= (cur[:, 0] == eos)
             if done.all():
+                times.append(time.perf_counter() - t0)
                 break
+        else:
+            out.append(cur)
         logits, cache = step_fn(params, cache, jnp.asarray(cur),
                                 jnp.int32(T + i))
+        jax.block_until_ready(logits)
+        times.append(time.perf_counter() - t0)
     return GenerationResult(tokens=np.concatenate(out, axis=1),
-                            steps=len(out) - 1, prefill_len=T)
+                            steps=len(out) - 1, prefill_len=T,
+                            step_times=np.asarray(times))
+
+
+# --------------------------------------------------------------------- #
+# requests / results
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Request:
+    """One serving request (a single sequence)."""
+
+    prompt: np.ndarray = field(repr=False)     # [T] int32
+    max_new: int = 32
+    eos: int | None = None
+    temperature: float = 0.0
+    seed: int = 0                               # per-request PRNG chain
+    pad: int | None = None                      # post-eos fill (def: eos)
+
+    @property
+    def fill(self) -> int:
+        if self.pad is not None:
+            return self.pad
+        return self.eos if self.eos is not None else 0
+
+
+@dataclass
+class ServeResult:
+    """Finished request: ``tokens`` = prompt + generated ids; generated
+    cells past the stop point carry the request's pad/eos fill."""
+
+    tokens: np.ndarray
+    prompt_len: int
+    emitted: int
+    model: str = ""
+    index: int = -1
+
+    @property
+    def generated(self) -> np.ndarray:
+        return self.tokens[self.prompt_len:]
+
+
+# --------------------------------------------------------------------- #
+# paged KV slots
+# --------------------------------------------------------------------- #
+class PagePool:
+    """Host-side physical-page allocator for the paged KV cache.
+
+    Page 0 is the reserved TRASH page (finished rows' writes are routed
+    there on device); pages ``1..n_pages-1`` are allocatable. Allocation
+    is deterministic (lowest free ids first) so engine runs are
+    reproducible. The invariant the paged cache relies on — no two live
+    slots ever share a physical page, and nobody owns the trash page —
+    is checkable at any time via :meth:`check_invariants`.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        self.n_pages = n_pages
+        self._free = list(range(1, n_pages))
+        self._owned: dict[int, list[int]] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, slot: int, n: int) -> list[int] | None:
+        """``n`` pages for ``slot``; None when the pool is exhausted
+        (the request stays queued until evictions free pages)."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages")
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        self._owned[slot] = pages
+        return pages
+
+    def free(self, slot: int) -> None:
+        pages = self._owned.pop(slot)
+        self._free.extend(pages)
+        self._free.sort()
+
+    def check_invariants(self) -> None:
+        seen: set[int] = set()
+        for slot, pages in self._owned.items():
+            for p in pages:
+                if p == 0:
+                    raise AssertionError(f"slot {slot} owns trash page 0")
+                if p in seen:
+                    raise AssertionError(
+                        f"page {p} aliased by two live slots")
+                if not 0 < p < self.n_pages:
+                    raise AssertionError(f"page {p} out of range")
+                seen.add(p)
+        if seen & set(self._free):
+            raise AssertionError("page both owned and free")
+
+
+# --------------------------------------------------------------------- #
+# the device-resident decode engine
+# --------------------------------------------------------------------- #
+class DecodeEngine:
+    """Continuous-batching decode engine: paged KV slots + ONE jitted
+    ``lax.while_loop`` per wave (DESIGN.md §13).
+
+    ``slots`` sequences decode simultaneously; each may hold up to
+    ``pages_per_slot = ceil(max_ctx / page_size)`` pages out of a shared
+    pool of ``n_pages`` physical pages (default: enough for every slot
+    to max out; pass a smaller pool to get real paging pressure —
+    admission then waits for evictions). All per-sequence decode state
+    (cache pages, next-token logits, lengths, done flags, PRNG chains,
+    emitted-token buffers) lives on device; a wave of up to ``wave_len``
+    tokens runs without host contact and only the tiny
+    ``done``/``emitted`` vectors sync back.
+
+    Greedy tokens are bit-compatible with the fixed :func:`generate`
+    oracle; temperature>0 follows the per-request PRNG chain
+    ``PRNGKey(request.seed)`` split once per step — exactly the oracle's
+    ``B=1`` chain.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 page_size: int = 8, max_ctx: int = 64,
+                 n_pages: int | None = None, max_new_cap: int = 64,
+                 name: str = ""):
+        if cfg.family == "encdec" or cfg.frontend:
+            raise NotImplementedError(
+                f"{cfg.name}: enc-dec / frontend models are served by "
+                "the legacy generate() path, not DecodeEngine")
+        self.cfg, self.params, self.name = cfg, params, name
+        self.slots = slots
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_ctx // page_size)
+        self.capacity = self.pages_per_slot * page_size
+        self.max_new_cap = max_new_cap
+        self.n_pages = (1 + slots * self.pages_per_slot
+                        if n_pages is None else n_pages)
+        self.pool = PagePool(self.n_pages)
+        self._sig = (slots, self.n_pages, page_size, self.pages_per_slot,
+                     max_new_cap)
+        self._free_slots = list(range(slots))
+        self._live: dict[int, dict] = {}
+        self._step_prev = 0
+        self.st = self._init_state()
+        self._wave_fn = self._build_wave()
+
+    # -- device state --------------------------------------------------- #
+    def _init_state(self) -> dict:
+        S, V = self.slots, self.cfg.vocab_padded
+        return {
+            "cache": lm.init_paged_cache(self.cfg, S, self.n_pages,
+                                         self.page_size,
+                                         self.pages_per_slot),
+            "logits": jnp.zeros((S, V), jnp.float32),
+            "len": jnp.zeros((S,), jnp.int32),
+            "done": jnp.ones((S,), bool),
+            "emitted": jnp.zeros((S,), jnp.int32),
+            "eos": jnp.full((S,), -1, jnp.int32),
+            "cap": jnp.zeros((S,), jnp.int32),
+            "fill": jnp.zeros((S,), jnp.int32),
+            "temp": jnp.zeros((S,), jnp.float32),
+            "keys": jnp.zeros((S, 2), jnp.uint32),
+            "buf": jnp.zeros((S, self.max_new_cap), jnp.int32),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    # -- jitted executables (EXEC_CACHE-keyed, trace-counted) ----------- #
+    def _build_wave(self):
+        cfg, S, buf_T = self.cfg, self.slots, self.max_new_cap
+        vocab = cfg.vocab
+        key = ("serve_wave", cfg) + self._sig
+
+        def build():
+            def sample_row(k, lg, temp):
+                k2, sub = jax.random.split(k)
+                greedy = jnp.argmax(lg).astype(jnp.int32)
+                z = (lg / jnp.where(temp > 0, temp, 1.0))[None, :]
+                samp = jax.random.categorical(sub, z)[0].astype(jnp.int32)
+                return k2, jnp.where(temp > 0, samp, greedy)
+
+            def wave(params, st, wave_len):
+                TRACE_COUNTS[key] += 1
+
+                def cond(carry):
+                    st, i = carry
+                    return (i < wave_len) & ~jnp.all(st["done"])
+
+                def body(carry):
+                    st, i = carry
+                    # 1. sample from the carried logits (the oracle's
+                    #    order: prefill logits feed the first token)
+                    keys, nxt = jax.vmap(sample_row)(
+                        st["keys"], st["logits"][:, :vocab], st["temp"])
+                    done = st["done"]
+                    rows = jnp.arange(S)
+                    pos = jnp.minimum(st["emitted"], buf_T - 1)
+                    # finished rows re-write their current cell's value
+                    # (a no-op) so their tail stays at the pad fill
+                    old = st["buf"][rows, pos]
+                    buf = st["buf"].at[rows, pos].set(
+                        jnp.where(done, old, nxt))
+                    emitted = st["emitted"] + jnp.where(done, 0, 1)
+                    just_eos = ((~done) & (st["eos"] >= 0)
+                                & (nxt == st["eos"]))
+                    done2 = done | just_eos | (emitted >= st["cap"])
+                    # 2. device-side stop handling: finished rows write
+                    #    to the trash page (index -1) and freeze length
+                    ci = jnp.where(done2, -1, st["len"])
+                    logits, cache = lm.decode_step(
+                        cfg, params, st["cache"], nxt[:, None], ci)
+                    st2 = dict(st, cache=cache, logits=logits[:, 0],
+                               keys=keys, buf=buf, emitted=emitted,
+                               done=done2,
+                               len=st["len"] + jnp.where(done2, 0, 1),
+                               step=st["step"] + 1)
+                    return st2, i + 1
+
+                st, _ = lax.while_loop(cond, body, (st, jnp.int32(0)))
+                return st
+
+            # params (arg 0) are shared across engines — only the state
+            # buffers are donated
+            return jax.jit(wave, donate_argnums=(1,))
+
+        return EXEC_CACHE.get(key, build)
+
+    def _prefill_fn(self, T: int):
+        cfg = self.cfg
+        Tp = -(-T // self.page_size) * self.page_size
+        key = ("serve_prefill", cfg, T, Tp)
+
+        def build():
+            def pf(params, tokens):
+                TRACE_COUNTS[key] += 1
+                return lm.prefill(cfg, params, {"tokens": tokens},
+                                  max_len=Tp)
+
+            return jax.jit(pf)
+
+        return EXEC_CACHE.get(key, build)
+
+    def _admit_fn(self, T: int):
+        cfg = self.cfg
+        key = ("serve_admit", cfg, T) + self._sig
+
+        def build():
+            def admit(st, slot, pages, pcache, logits0, eos, cap, temp,
+                      fill, prng):
+                TRACE_COUNTS[key] += 1
+                cache = lm.admit_prefill(cfg, st["cache"], pcache, pages,
+                                         slot)
+                return dict(
+                    st, cache=cache,
+                    logits=st["logits"].at[slot].set(logits0),
+                    len=st["len"].at[slot].set(T),
+                    done=st["done"].at[slot].set(False),
+                    emitted=st["emitted"].at[slot].set(0),
+                    eos=st["eos"].at[slot].set(eos),
+                    cap=st["cap"].at[slot].set(cap),
+                    temp=st["temp"].at[slot].set(temp),
+                    fill=st["fill"].at[slot].set(fill),
+                    keys=st["keys"].at[slot].set(prng),
+                    buf=st["buf"].at[slot].set(fill),
+                )
+
+            return jax.jit(admit, donate_argnums=(0,))
+
+        return EXEC_CACHE.get(key, build)
+
+    # -- host-side protocol --------------------------------------------- #
+    @property
+    def live(self) -> int:
+        return len(self._live)
+
+    @property
+    def has_free_slot(self) -> bool:
+        return bool(self._free_slots)
+
+    def validate(self, req: Request) -> None:
+        T = int(np.asarray(req.prompt).shape[0])
+        if T + req.max_new > self.capacity:
+            raise ValueError(
+                f"request needs {T + req.max_new} cache positions > slot "
+                f"capacity {self.capacity} (= pages_per_slot * page_size)")
+        if req.max_new > self.max_new_cap:
+            raise ValueError(f"max_new {req.max_new} > engine "
+                             f"max_new_cap {self.max_new_cap}")
+        if -(-(T + req.max_new) // self.page_size) > self.n_pages - 1:
+            raise ValueError("request needs more pages than the pool has")
+
+    def prefill(self, req: Request) -> dict:
+        """Run (jitted) prefill for a request — safe to call from the
+        stream's prefetch thread while a wave is in flight."""
+        prompt = np.asarray(req.prompt, np.int32)
+        T = prompt.shape[0]
+        logits, cache = self._prefill_fn(T)(self.params,
+                                            jnp.asarray(prompt[None]))
+        return {"T": T, "logits": logits[0, 0], "cache": cache}
+
+    def admit(self, req: Request, pre: dict | None = None,
+              handle=None) -> int | None:
+        """Admit a request into a free slot (between waves). Returns the
+        slot id, or None when no slot / not enough free pages."""
+        if not self._free_slots:
+            return None
+        T = pre["T"] if pre else int(np.asarray(req.prompt).shape[0])
+        n_total = -(-(T + req.max_new) // self.page_size)
+        slot = self._free_slots[0]
+        pages = self.pool.alloc(slot, n_total)
+        if pages is None:
+            return None          # paging pressure: caller keeps it queued
+        self._free_slots.pop(0)
+        if pre is None:
+            pre = self.prefill(req)
+        row = np.zeros(self.pages_per_slot, np.int32)
+        row[:n_total] = pages
+        eos = -1 if req.eos is None else int(req.eos)
+        self.st = self._admit_fn(T)(
+            self.st, jnp.int32(slot), jnp.asarray(row), pre["cache"],
+            pre["logits"], jnp.int32(eos), jnp.int32(req.max_new),
+            jnp.float32(req.temperature), jnp.int32(req.fill),
+            jax.random.PRNGKey(req.seed))
+        self._live[slot] = {"handle": handle, "prompt_len": T,
+                            "prompt": np.asarray(req.prompt, np.int32),
+                            "emitted_prev": 0}
+        return slot
+
+    def wave(self, wave_len: int = 8):
+        """Run up to ``wave_len`` decode steps on device, then sync the
+        finished set back and evict it. Returns
+        ``(finished, tokens_emitted, steps_run)`` where ``finished`` is
+        a list of ``(slot, handle, ServeResult)``."""
+        self.st = self._wave_fn(self.params, self.st,
+                                jnp.int32(wave_len))
+        done = np.asarray(self.st["done"])
+        emitted = np.asarray(self.st["emitted"])
+        step = int(self.st["step"])
+        steps_run, self._step_prev = step - self._step_prev, step
+        tokens = 0
+        for s, h in self._live.items():
+            tokens += int(emitted[s]) - h["emitted_prev"]
+            h["emitted_prev"] = int(emitted[s])
+        newly = [s for s in list(self._live) if done[s]]
+        finished = []
+        if newly:
+            buf = np.asarray(self.st["buf"])
+            for s in newly:
+                h = self._live.pop(s)
+                self.pool.free(s)
+                self._free_slots.append(s)
+                self._free_slots.sort()
+                e = int(emitted[s])
+                res = ServeResult(
+                    tokens=np.concatenate([h["prompt"], buf[s, :e]]),
+                    prompt_len=h["prompt_len"], emitted=e,
+                    model=self.name)
+                finished.append((s, h["handle"], res))
+        return finished, tokens, steps_run
+
+
+# --------------------------------------------------------------------- #
+# the continuous-batching front door
+# --------------------------------------------------------------------- #
+@dataclass
+class ServeReport:
+    """What the last :meth:`ServeStream.run` did."""
+
+    requests: int
+    waves: int
+    admitted: int
+    #: mean fraction of batch slots occupied over executed decode steps
+    occupancy: float
+    #: per-wave samples: (model, wall_s, steps, tokens, live_slots)
+    wave_stats: list = field(default_factory=list, repr=False)
+    #: jit traces paid during the run (0 after warmup — the
+    #: zero-recompilation admission contract)
+    traces: int = 0
+    pipelined: bool = False
+
+
+class ServeStream:
+    """Multi-tenant continuous-batching scheduler over
+    :class:`DecodeEngine` s — the serving sibling of
+    :class:`repro.runtime.jobstream.JobStream`'s wave batcher.
+
+    Requests are FIFO per model. Each scheduler iteration (1) tops up
+    the prefill prefetch lane, (2) runs one decode WAVE per engine with
+    live work — while the wave occupies the device, the prefetch thread
+    drives prefill of queued requests (the JobStream double-buffer
+    discipline) — and (3) evicts finished sequences and admits prefilled
+    ones into the freed slots. Jitted executables come from the
+    process-wide EXEC_CACHE, so steady-state admission pays ZERO new
+    compilations.
+    """
+
+    def __init__(self, engines, *, wave_len: int = 8, prefetch: int = 2,
+                 pipeline: bool = True):
+        if isinstance(engines, DecodeEngine):
+            engines = {"": engines}
+        self.engines: dict[str, DecodeEngine] = dict(engines)
+        self.wave_len = wave_len
+        self.prefetch = max(1, prefetch)
+        self.pipeline = pipeline
+        self.last_report: ServeReport | None = None
+
+    def run(self, requests: Sequence) -> list[ServeResult]:
+        """``requests``: a sequence of :class:`Request` (single-engine
+        streams) or ``(model_name, Request)`` pairs. Returns results in
+        submission order."""
+        jobs: list[tuple[str, Request]] = []
+        for r in requests:
+            name, req = r if isinstance(r, tuple) else ("", r)
+            if name not in self.engines:
+                raise KeyError(f"no engine named {name!r}")
+            self.engines[name].validate(req)
+            jobs.append((name, req))
+        results: list[ServeResult | None] = [None] * len(jobs)
+        queues = {n: deque() for n in self.engines}
+        for i, (n, req) in enumerate(jobs):
+            queues[n].append((i, req))
+        pending = {n: deque() for n in self.engines}
+        t_traces = trace_total()
+        stats: list = []
+        waves = admitted = 0
+        pool = ThreadPoolExecutor(max_workers=1) if self.pipeline else None
+        try:
+            while any(r is None for r in results):
+                progress = False
+                for name, eng in self.engines.items():
+                    q, pend = queues[name], pending[name]
+                    # 1. top up the prefill prefetch lane
+                    while q and len(pend) < self.prefetch:
+                        idx, req = q.popleft()
+                        if pool is not None:
+                            fut = pool.submit(eng.prefill, req)
+                        else:
+                            fut = None
+                        pend.append((idx, req, fut))
+                        progress = True
+                    # 2. decode wave (prefetch thread prefills meanwhile)
+                    if eng.live:
+                        t0 = time.perf_counter()
+                        fin, toks, steps = eng.wave(self.wave_len)
+                        dt = time.perf_counter() - t0
+                        stats.append((name, dt, steps, toks, eng.live
+                                      + len(fin)))
+                        waves += 1
+                        progress = True
+                        for _slot, handle, res in fin:
+                            res.model, res.index = name, handle
+                            results[handle] = res
+                    # 3. admit prefilled requests into freed slots
+                    while pend and eng.has_free_slot:
+                        idx, req, fut = pend[0]
+                        pre = fut.result() if fut is not None \
+                            else eng.prefill(req)
+                        slot = eng.admit(req, pre, handle=idx)
+                        if slot is None:
+                            break                # pool pressure: wait
+                        pend.popleft()
+                        admitted += 1
+                        progress = True
+                if not progress:
+                    raise RuntimeError(
+                        "serve stream stalled (no admission possible and "
+                        "no live work) — request larger than pool?")
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        slot_steps = sum(s[2] * s[4] for s in stats)
+        cap_steps = sum(s[2] * self.engines[s[0]].slots for s in stats)
+        self.last_report = ServeReport(
+            requests=len(jobs), waves=waves, admitted=admitted,
+            occupancy=(slot_steps / cap_steps) if cap_steps else 0.0,
+            wave_stats=stats, traces=trace_total() - t_traces,
+            pipelined=self.pipeline)
+        return results  # type: ignore[return-value]
