@@ -1,0 +1,200 @@
+"""Elastic recovery gap: warm vs cold survivor-set re-lowering.
+
+Acceptance numbers for live elasticity (DESIGN.md §14): stream waves
+through an elastic :class:`~repro.runtime.jobstream.JobStream` while a
+scripted controller kills one worker mid-stream (and rejoins it later),
+then price the RECOVERY PATH — what the kill boundary pays before the
+first degraded batch can shuffle. Two variants of the same churn:
+
+  warm   :meth:`ScheduleCache.warm_survivors` pre-lowered every
+         single-failure schedule, so recovery is a pure cache hit. The
+         elastic run's lowering count must be ZERO (hard gate — this is
+         the §14 cache warm-up contract, not a speed preference).
+  cold   the cache is cleared first, so the kill boundary pays a full
+         degraded re-lowering on the critical path.
+
+Both end-to-end runs are verified BIT-identical to the healthy serial
+oracle before anything is reported (the churn contract). The strict
+gate times the recovery lookup itself — ``SCHEDULE_CACHE.degraded`` as
+a cold miss vs a warm hit — because at these cluster sizes the numpy
+interpreter's per-batch wall time (ms, noisy) cannot resolve the
+sub-ms lowering; the per-batch kill gap is still reported from
+:attr:`StreamReport.batch_times` for the record. Warm recovery must
+beat cold; under ``CAMR_BENCH_STRICT=1`` a miss is fatal, otherwise it
+is a stderr warning.
+
+    PYTHONPATH=src python -m benchmarks.bench_elastic [--smoke]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.bench_jobstream import make_specs
+from repro.core.engine import CAMREngine
+from repro.core.schedule import SCHEDULE_CACHE
+from repro.runtime.fault import (ElasticController, Membership,
+                                 StragglerPolicy)
+from repro.runtime.jobstream import JobStream
+
+# (q, k, waves, kill_at, rejoin_at, worker) — kill mid-stream, rejoin
+# before the tail so every membership edge is on the measured path
+CONFIGS = [(3, 3, 12, 5, 9, 4), (2, 4, 12, 5, 9, 3), (4, 3, 10, 4, 8, 7)]
+SMOKE_CONFIGS = [(2, 4, 8, 3, 6, 2)]
+D = 32            # small value width: the bench times the runtime and
+                  # the recovery path, not the shuffle arithmetic
+RECOVERED = 1.5   # batch time back within 1.5x pre-kill median
+
+
+class ScriptedChurn(ElasticController):
+    """Deterministic churn: kill/rejoin workers at scripted waves."""
+
+    def __init__(self, membership, kills=None, rejoins=None):
+        super().__init__(membership)
+        self.kills = dict(kills or {})
+        self.rejoins = dict(rejoins or {})
+
+    def on_wave_start(self, wave):
+        if wave in self.kills:
+            self.membership.kill(self.kills.pop(wave))
+        if wave in self.rejoins:
+            self.membership.rejoin(self.rejoins.pop(wave))
+
+
+def _serial_oracle(specs):
+    return [CAMREngine(sp.cfg, sp.map_fn, combine=sp.combine).run(
+        sp.datasets) for sp in specs]
+
+
+def _run_churned(specs, kill_at, rejoin_at, worker, warm, oracle):
+    q, k = specs[0].cfg.q, specs[0].cfg.k
+    if warm:
+        SCHEDULE_CACHE.warm_survivors(
+            CAMREngine(specs[0].cfg, specs[0].map_fn).program)
+    else:
+        SCHEDULE_CACHE.clear()
+    # demote=False: the churn schedule is scripted; µs-scale map noise
+    # must not let the detector steal the one max_failed slot
+    member = Membership(q, k, policy=StragglerPolicy(demote=False))
+    ctrl = ScriptedChurn(member,
+                         kills={kill_at: worker},
+                         rejoins={rejoin_at: worker})
+    # wave_batch=1 + no pipelining: batch_times[i] is exactly wave i's
+    # wall time, so the kill boundary is attributable to one sample
+    stream = JobStream(elastic=ctrl, wave_batch=1, pipeline=False)
+    got = stream.run(specs)
+    for want, res in zip(oracle, got):
+        for a, b in zip(want, res):
+            assert a.keys() == b.keys()
+            for key in a:
+                assert np.array_equal(a[key], b[key]), key
+    return stream.last_report
+
+
+def _recovery_path(program, worker) -> tuple:
+    """(cold s, warm s): the kill boundary's schedule lookup as a cold
+    miss (full degraded re-lowering) vs a warm_survivors hit — the
+    exact call :class:`~repro.runtime.fault.DegradedCAMREngine` makes
+    on the recovery critical path. Best of 3 each (scheduler noise)."""
+    cold, hot = [], []
+    for _ in range(3):
+        SCHEDULE_CACHE.clear()
+        t0 = time.perf_counter()
+        SCHEDULE_CACHE.degraded(program, {worker})
+        cold.append(time.perf_counter() - t0)
+        SCHEDULE_CACHE.warm_survivors(program)
+        t0 = time.perf_counter()
+        SCHEDULE_CACHE.degraded(program, {worker})
+        hot.append(time.perf_counter() - t0)
+    return min(cold), min(hot)
+
+
+def _kill_gap(times, kill_at):
+    """(kill-batch gap s vs pre-kill median, batches until back within
+    RECOVERED x the pre-kill median)."""
+    med = float(np.median(times[1:kill_at]))    # drop batch-0 warmup
+    gap = times[kill_at] - med
+    steps = len(times) - kill_at
+    for i in range(kill_at, len(times)):
+        if times[i] <= RECOVERED * med:
+            steps = i - kill_at
+            break
+    return gap, steps
+
+
+def bench_config(q, k, waves, kill_at, rejoin_at, worker, name):
+    specs = make_specs(q, k, waves, d=D)
+    oracle = _serial_oracle(specs)
+    cold = _run_churned(specs, kill_at, rejoin_at, worker, False, oracle)
+    warm = _run_churned(specs, kill_at, rejoin_at, worker, True, oracle)
+    if warm.cache_misses != 0:
+        raise SystemExit(
+            f"{name}: warm elastic run paid {warm.cache_misses} "
+            "lowerings — warm_survivors must make recovery a pure "
+            "cache hit (DESIGN.md §14)")
+    prog = CAMREngine(specs[0].cfg, specs[0].map_fn).program
+    cold_rec, warm_rec = _recovery_path(prog, worker)
+    cold_gap, cold_steps = _kill_gap(cold.batch_times, kill_at)
+    warm_gap, warm_steps = _kill_gap(warm.batch_times, kill_at)
+    return dict(
+        name=name, waves=waves, kill_at=kill_at, rejoin_at=rejoin_at,
+        cold_recovery_s=cold_rec, warm_recovery_s=warm_rec,
+        cold_gap_s=cold_gap, warm_gap_s=warm_gap,
+        cold_steps=cold_steps, warm_steps=warm_steps,
+        cold_lowerings=cold.cache_misses,
+        migrations=warm.migrations,
+    )
+
+
+def rows(smoke: bool | None = None):
+    """Suite entry point for benchmarks/run.py."""
+    if smoke is None:
+        smoke = os.environ.get("CAMR_BENCH_SMOKE", "") == "1"
+    strict = os.environ.get("CAMR_BENCH_STRICT") == "1"
+    out = []
+    for q, k, w, ka, ra, wk in (SMOKE_CONFIGS if smoke else CONFIGS):
+        r = bench_config(q, k, w, ka, ra, wk,
+                         f"elastic_q{q}_k{k}_w{w}_kill{ka}")
+        if not r["warm_recovery_s"] < r["cold_recovery_s"]:
+            msg = (f"{r['name']}: warm recovery "
+                   f"{r['warm_recovery_s'] * 1e6:.0f}us did not beat "
+                   f"cold re-lowering "
+                   f"{r['cold_recovery_s'] * 1e6:.0f}us")
+            if strict:
+                raise SystemExit(msg)
+            print(f"WARNING: {msg} (set CAMR_BENCH_STRICT=1 to make "
+                  "this fatal)", file=sys.stderr)
+        out.append({
+            "name": r["name"],
+            "us_per_call": r["warm_recovery_s"] * 1e6,
+            "derived": (f"waves={r['waves']} kill@{r['kill_at']} "
+                        f"rejoin@{r['rejoin_at']} "
+                        f"recovery cold={r['cold_recovery_s'] * 1e6:.0f}us"
+                        f" warm={r['warm_recovery_s'] * 1e6:.0f}us "
+                        f"kill_gap cold={r['cold_gap_s'] * 1e3:.2f}ms "
+                        f"warm={r['warm_gap_s'] * 1e3:.2f}ms "
+                        f"cold_lowerings={r['cold_lowerings']} "
+                        f"warm_lowerings=0 "
+                        f"recover_steps={r['warm_steps']} "
+                        f"migrations={r['migrations']}"),
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config (CI smoke for the README "
+                         "commands)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in rows(smoke=args.smoke):
+        print(f"{row['name']},{row['us_per_call']:.1f},"
+              f"\"{row['derived']}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,6 +60,7 @@ shuffle itself stays a lossless bit transport on either lane.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -657,10 +658,13 @@ class ShuffleStream:
         self.use_kernels = use_kernels
         self._jitted: dict[int, object] = {}   # W -> compiled executor
         self._pending: list = []               # waves awaiting dispatch
-        self._in_flight: deque = deque()       # (device out, W)
+        self._in_flight: deque = deque()       # (out, W, dispatch time)
         self._done: list = []                  # host [K, J, d] outputs
         self.dispatches = 0                    # program executions issued
         self.compiles = 0                      # executors traced (per W)
+        self._failed: frozenset = frozenset()  # current survivor-set gap
+        self.swaps = 0                         # degrade/restore events
+        self.wave_times: list[float] = []      # dispatch->collect wall s
 
     # -- compiled executor per stack width ------------------------------ #
     def _fn(self, W: int):
@@ -684,6 +688,55 @@ class ShuffleStream:
                 body, mesh=self.mesh, in_specs=P(self.axis_name),
                 out_specs=P(self.axis_name)))
         return self._jitted[W]
+
+    # -- live elasticity (DESIGN.md §14) -------------------------------- #
+    @property
+    def failed(self) -> frozenset:
+        return self._failed
+
+    def degrade(self, failed) -> None:
+        """Swap subsequent dispatches to the survivor set ``failed``.
+
+        Validates recoverability up front (unrecoverable sets raise
+        ``ValueError`` exactly as :func:`~repro.core.schedule
+        .lower_degraded` does) and pulls the re-lowering from the warm
+        :data:`SCHEDULE_CACHE`. Waves already in flight were dispatched
+        healthy and complete unchanged — a real survivor set only
+        affects exchanges issued after the membership change. Degraded
+        waves run the fault runtime's host interpreter
+        (:func:`repro.runtime.fault.degraded_shuffle_host`) over the
+        same contribution tensors; the compiled healthy executors stay
+        resident, so :meth:`restore` is retrace-free (``compiles``
+        flat).
+        """
+        failed = frozenset(int(s) for s in failed)
+        if not failed:
+            self.restore()
+            return
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K, d=self.d)
+        SCHEDULE_CACHE.degraded(prog, failed)   # validate + warm
+        if failed != self._failed:
+            self._failed = failed
+            self.swaps += 1
+
+    def restore(self) -> None:
+        """Re-admit everyone: subsequent dispatches run the compiled
+        healthy executor again (no retrace — the jitted cache never
+        dropped)."""
+        if self._failed:
+            self._failed = frozenset()
+            self.swaps += 1
+
+    def _degraded_exec(self, buf, W: int):
+        """Host-side degraded wave: interpret the survivor-set
+        re-lowering over the stacked [K, J_own, k-1, K, W*d] tensor.
+        Output is bitwise-identical to the healthy executor's
+        (DESIGN.md §11), in logical slots."""
+        from repro.runtime.fault import degraded_shuffle_host
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                      d=W * self.d)
+        return degraded_shuffle_host(prog, self._failed,
+                                     np.asarray(buf))
 
     def _check_wave(self, contribs) -> None:
         shape = (self.K, self.q ** (self.k - 2), self.k - 1, self.K,
@@ -720,13 +773,17 @@ class ShuffleStream:
         """
         self._check_wave(contribs)
         self.dispatches += 1
+        if self._failed:
+            return self._degraded_exec(contribs, 1)
         return self._fn(1)(contribs)
 
     def stats(self) -> dict:
         """Executor-reuse counters (``compiles`` stays flat while
-        ``dispatches`` grows on a steady-state stream)."""
+        ``dispatches`` grows on a steady-state stream — including
+        across degrade/restore ``swaps``)."""
         return dict(dispatches=self.dispatches, compiles=self.compiles,
-                    widths=sorted(self._jitted))
+                    widths=sorted(self._jitted), swaps=self.swaps,
+                    failed=tuple(sorted(self._failed)))
 
     def _dispatch(self) -> None:
         waves, self._pending = self._pending, []
@@ -735,15 +792,20 @@ class ShuffleStream:
         buf = (waves[0] if len(waves) == 1
                else np.concatenate([np.asarray(w) for w in waves],
                                    axis=-1))
-        out = self._fn(len(waves))(buf)        # async: returns immediately
+        t0 = time.perf_counter()
+        if self._failed:
+            out = self._degraded_exec(buf, len(waves))  # host, synchronous
+        else:
+            out = self._fn(len(waves))(buf)    # async: returns immediately
         self.dispatches += 1
-        self._in_flight.append((out, len(waves)))
+        self._in_flight.append((out, len(waves), t0))
         while len(self._in_flight) > self.depth:
             self._collect_oldest()
 
     def _collect_oldest(self) -> None:
-        out, W = self._in_flight.popleft()
+        out, W, t0 = self._in_flight.popleft()
         arr = np.asarray(jax.block_until_ready(out))   # [K, J, W*d]
+        self.wave_times.append(time.perf_counter() - t0)
         if W == 1:
             self._done.append(arr)
         else:

@@ -12,6 +12,7 @@ The engine is the reference oracle for the TPU/shard_map implementation in
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -107,6 +108,10 @@ class CAMREngine:
         self.servers = [_ServerState() for _ in range(cfg.K)]
         self._value_dim: int | None = None
         self._dtype = None
+        #: per-server wall seconds spent in the last map phase — the
+        #: wave-timing signal the elastic runtime's straggler detector
+        #: consumes (repro.runtime.fault.Membership.observe).
+        self.map_times = np.zeros(cfg.K)
 
     # ------------------------------------------------------------------ #
     # function assignment: server s reduces functions {s, s+K, ...}
@@ -141,6 +146,7 @@ class CAMREngine:
         self.servers = [_ServerState() for _ in range(self.cfg.K)]
         self._value_dim = None
         self._dtype = None
+        self.map_times = np.zeros(self.cfg.K)
 
     def run_stream(self, waves) -> list:
         """Serial multi-wave loop: :meth:`run` on each element of
@@ -157,6 +163,7 @@ class CAMREngine:
     def map_phase(self, datasets) -> None:
         pl, d = self.placement, self.design
         for s in range(d.K):
+            t_start = time.perf_counter()
             st = self.servers[s]
             for job, t in pl.stored_batches(s):
                 vals = []
@@ -173,6 +180,7 @@ class CAMREngine:
                 st.agg[(job, t)] = agg
                 self._value_dim = agg.shape[1]
                 self._dtype = agg.dtype
+            self.map_times[s] = time.perf_counter() - t_start
 
     # -- payload helpers ------------------------------------------------ #
     def _ser(self, arr: np.ndarray) -> bytes:

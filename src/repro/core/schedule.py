@@ -832,6 +832,27 @@ class ScheduleCache:
                 self._put(self._degraded, key, got)
             return got
 
+    def warm_survivors(self, program, max_failures: int = 1) -> int:
+        """Pre-lower the degraded schedule of every recoverable
+        survivor set with up to ``max_failures`` concurrent failures,
+        so a mid-stream membership change never pays a lowering on the
+        recovery critical path (DESIGN.md §14). Unrecoverable sets
+        (same-class double failures, total batch loss) are skipped.
+        Returns the number of degraded programs now resident. Bounded:
+        single failures are K entries; keep ``max_failures`` small or
+        raise ``maxsize`` accordingly (LRU eviction applies as usual).
+        """
+        from itertools import combinations
+        warmed = 0
+        for r in range(1, max_failures + 1):
+            for combo in combinations(range(program.K), r):
+                try:
+                    self.degraded(program, set(combo))
+                except ValueError:
+                    continue
+                warmed += 1
+        return warmed
+
 
 #: Module-level default — all engines/plans share one schedule cache.
 SCHEDULE_CACHE = ScheduleCache()

@@ -97,9 +97,18 @@ def lower_schedules(q: int, k: int, d: int,
 
 def measure_stream(q: int, k: int, d: int, waves: int,
                    wave_batch: int = 2, depth: int = 2,
-                   codec: str = "fused") -> dict:
+                   codec: str = "fused", kill_at: int | None = None,
+                   rejoin_at: int | None = None,
+                   kill_worker: int = 0) -> dict:
     """Serial-dispatch vs. ShuffleStream wall time over ``waves`` waves
-    of random contributions (outputs checked against the oracle)."""
+    of random contributions (outputs checked against the oracle).
+
+    ``kill_at`` additionally replays the same waves through a churn
+    pass: worker ``kill_worker`` is degraded at wave ``kill_at`` (and
+    restored at ``rejoin_at``, if given) via the stream's elastic lane
+    (DESIGN.md §14). Every churned output must stay BIT-identical to
+    the healthy serial oracle, and the compiled executors must survive
+    the swap (``compiles`` flat — degrade/restore never retraces)."""
     plan = make_plan(q, k, d)
     K = plan.K
     mesh = make_mesh((K,), ("camr",))
@@ -133,10 +142,30 @@ def measure_stream(q: int, k: int, d: int, waves: int,
         np.testing.assert_allclose(out, camr_shuffle_reference(plan, bg),
                                    rtol=2e-5, atol=2e-6)
         np.testing.assert_array_equal(out, ser)        # bit-identical
-    return dict(waves=waves, wave_batch=wave_batch, depth=depth,
-                serial_s=t_serial, stream_s=t_stream,
-                speedup=t_serial / t_stream,
-                stream_wps=waves / t_stream)
+    res = dict(waves=waves, wave_batch=wave_batch, depth=depth,
+               serial_s=t_serial, stream_s=t_stream,
+               speedup=t_serial / t_stream,
+               stream_wps=waves / t_stream)
+
+    if kill_at is not None:
+        compiles_before = stream.stats()["compiles"]
+        for i, c in enumerate(contribs):
+            if i == kill_at:
+                stream.degrade({kill_worker})
+            if rejoin_at is not None and i == rejoin_at:
+                stream.restore()
+            stream.submit(c)
+        churned = stream.drain()
+        stream.restore()
+        for out, ser in zip(churned, serial_out):
+            np.testing.assert_array_equal(out, ser)    # churn contract
+        st = stream.stats()
+        assert st["compiles"] == compiles_before, \
+            "degrade/restore must not retrace the compiled executors"
+        res["churn"] = dict(kill_at=kill_at, rejoin_at=rejoin_at,
+                            worker=kill_worker, swaps=st["swaps"],
+                            compiles=st["compiles"])
+    return res
 
 
 def main():
@@ -148,12 +177,24 @@ def main():
                     help="also time W waves: serial dispatch vs "
                          "ShuffleStream (async + d-stacked batching)")
     ap.add_argument("--wave-batch", type=int, default=2)
+    ap.add_argument("--kill-at", type=int, default=None, metavar="W",
+                    help="with --stream: degrade one worker at wave W "
+                         "and replay the stream through the elastic "
+                         "lane (outputs stay bit-identical, executors "
+                         "stay compiled)")
+    ap.add_argument("--rejoin-at", type=int, default=None, metavar="W",
+                    help="restore the killed worker at wave W")
+    ap.add_argument("--kill-worker", type=int, default=0, metavar="N",
+                    help="which worker --kill-at degrades (default 0)")
     ap.add_argument("--codec", choices=("fused", "multipass"),
                     default="fused",
                     help="XOR codec lane (DESIGN.md §10): fused "
                          "single-pass gather kernels vs the multipass "
                          "oracle")
     args = ap.parse_args()
+    if args.kill_at is not None and not args.stream:
+        ap.error("--kill-at needs --stream W (churn replays the "
+                 "streamed waves)")
     res = lower_schedules(args.q, args.k, args.d, codec=args.codec)
     print(json.dumps(res, indent=1, default=str))
     w = {m: res[f"{m}_wire"] for m in ("camr", "uncoded", "allreduce")}
@@ -163,11 +204,22 @@ def main():
               f"({b / base:6.3f}x of allreduce)")
     if args.stream:
         s = measure_stream(args.q, args.k, args.d, args.stream,
-                           wave_batch=args.wave_batch, codec=args.codec)
+                           wave_batch=args.wave_batch, codec=args.codec,
+                           kill_at=args.kill_at,
+                           rejoin_at=args.rejoin_at,
+                           kill_worker=args.kill_worker)
         print(f"stream     {s['waves']} waves: serial="
               f"{s['serial_s'] * 1e3:.1f}ms  pipelined="
               f"{s['stream_s'] * 1e3:.1f}ms  "
               f"({s['speedup']:.2f}x, {s['stream_wps']:.1f} waves/s)")
+        if "churn" in s:
+            c = s["churn"]
+            rj = ("" if c["rejoin_at"] is None
+                  else f" rejoin@{c['rejoin_at']}")
+            print(f"churn      kill worker {c['worker']} @wave "
+                  f"{c['kill_at']}{rj}: outputs bit-identical, "
+                  f"swaps={c['swaps']}, compiles={c['compiles']} "
+                  "(no retrace)")
 
 
 if __name__ == "__main__":

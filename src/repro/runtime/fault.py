@@ -29,6 +29,7 @@ and quantifies data movement.
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 
 import numpy as np
@@ -39,7 +40,15 @@ from repro.core.placement import make_placement
 from repro.core.schedule import SCHEDULE_CACHE, DegradedProgram
 from repro.core.shuffle import Transmission
 
-__all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport"]
+__all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport",
+           "MembershipError", "StragglerPolicy", "Membership",
+           "ElasticController", "retarget_engine",
+           "degraded_shuffle_host"]
+
+
+class MembershipError(RuntimeError):
+    """Invalid membership transition, or a degraded engine whose failed
+    set was mutated after its survivor-set lowering was fixed."""
 
 
 class DegradedCAMREngine(CAMREngine):
@@ -68,6 +77,29 @@ class DegradedCAMREngine(CAMREngine):
     def migrate_target(self, s: int) -> int:
         """Live server taking over s's reduce duties (same class)."""
         return int(self.degraded.migrate[s])
+
+    # -- frozen-membership guard ---------------------------------------- #
+    def _check_membership_frozen(self) -> None:
+        """The survivor set is FIXED at construction: every uncoded
+        route, stage-3 source and migration-fill send is baked into the
+        re-lowered :class:`DegradedProgram`. Stacking another failure
+        onto a live engine would silently mis-reduce (the schedule
+        would keep routing through the newly-dead server), so any drift
+        between ``self.failed`` and the lowered set is a hard error."""
+        if frozenset(self.failed) != self.degraded.failed:
+            raise MembershipError(
+                f"failed set changed after lowering: this engine was "
+                f"re-lowered for failures {sorted(self.degraded.failed)} "
+                f"but now sees {sorted(self.failed)}. A "
+                "DegradedCAMREngine is frozen to one survivor set — "
+                "route membership changes through a fresh re-lowering "
+                "instead (repro.runtime.fault.retarget_engine adopts "
+                "the map state and pulls the new survivor-set schedule "
+                "from the warm SCHEDULE_CACHE).")
+
+    def shuffle_phase(self):
+        self._check_membership_frozen()
+        super().shuffle_phase()
 
     # -- degraded shuffle ----------------------------------------------- #
     def _coded_stage(self, stage, fn_group):
@@ -121,6 +153,7 @@ class DegradedCAMREngine(CAMREngine):
     def reduce_phase(self):
         """Reduce on live servers; migrated functions use the redirected
         (stage-1/2 batch value) + (stage-3/fill complement) pair."""
+        self._check_membership_frozen()
         pl, d = self.placement, self.design
         results = [dict() for _ in range(d.K)]
         for s_orig in range(d.K):
@@ -199,3 +232,347 @@ def elastic_replan(q_old: int, k_old: int, K_new: int,
         old_qk=(q_old, k_old), new_qk=(q_new, k_new),
         moved_fraction=moved / max(total, 1),
         new_storage_fraction=(k_new - 1) / K_new)
+
+
+# --------------------------------------------------------------------- #
+# live elasticity (DESIGN.md §14): membership state machine, straggler
+# detection, wave-boundary control, and engine re-targeting
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class StragglerPolicy:
+    """Knobs of the wave-timing straggler detector (DESIGN.md §14).
+
+    A worker whose observed map time exceeds ``rel_threshold`` times the
+    live-set median (or ``abs_timeout_s``, when set) earns a strike and
+    is flagged ``straggler``; ``patience`` consecutive strikes demote it
+    to ``dead`` when ``demote`` is on. ``max_failed`` caps concurrent
+    dead workers at what one re-lowering can absorb — a would-be demote
+    beyond the cap keeps the worker flagged but live (slow data beats
+    no data). Waves whose live median lands under ``min_wave_s`` are
+    too fast to measure and are skipped entirely (no strikes, no
+    clears) — scheduler jitter on a µs-scale map phase says nothing
+    about worker health.
+    """
+
+    rel_threshold: float = 4.0
+    abs_timeout_s: float | None = None
+    patience: int = 2
+    demote: bool = True
+    max_failed: int = 1
+    min_wave_s: float = 0.0
+
+
+class Membership:
+    """Worker membership state machine for one (q, k) CAMR cluster.
+
+    States: ``live`` -> ``straggler`` (timing strikes) -> ``dead``
+    (demoted, or killed outright) -> ``live`` again via :meth:`rejoin`.
+    Every transition bumps ``generation`` and is appended to ``events``
+    — the stream's replan hook keys off :meth:`failed`, so a stale
+    engine is always detectable by set comparison.
+
+    :meth:`rejoin` re-admits a worker through
+    :func:`elastic_replan`'s pure re-placement: with the cluster size
+    unchanged the factorization is pinned to the original ``(q, k)``
+    (``mu_target = (k-1)/K``), so the replan receipt proves
+    ``moved_fraction == 0`` — no subfile moves and nothing re-encodes;
+    the rejoined worker's stored batches are simply valid again.
+    """
+
+    LIVE, STRAGGLER, DEAD = "live", "straggler", "dead"
+
+    def __init__(self, q: int, k: int, *, gamma: int = 1,
+                 policy: StragglerPolicy | None = None):
+        self.q, self.k, self.gamma = q, k, gamma
+        self.K = q * k
+        self.policy = policy or StragglerPolicy()
+        self.state = [self.LIVE] * self.K
+        self.strikes = [0] * self.K
+        self.generation = 0
+        self.events: list[tuple] = []     # (generation, kind, worker)
+        self.replans: list[ReplanReport] = []
+
+    # -- queries --------------------------------------------------------- #
+    def failed(self) -> frozenset:
+        return frozenset(s for s in range(self.K)
+                         if self.state[s] == self.DEAD)
+
+    def live(self) -> frozenset:
+        return frozenset(s for s in range(self.K)
+                         if self.state[s] != self.DEAD)
+
+    def _check_worker(self, w: int) -> None:
+        if not 0 <= w < self.K:
+            raise MembershipError(f"worker {w} outside cluster "
+                                  f"[0, {self.K})")
+
+    def _record(self, kind: str, worker: int) -> None:
+        self.generation += 1
+        self.events.append((self.generation, kind, worker))
+
+    # -- transitions ----------------------------------------------------- #
+    def kill(self, w: int) -> None:
+        """live/straggler -> dead (crash or operator drain)."""
+        self._check_worker(w)
+        if self.state[w] == self.DEAD:
+            raise MembershipError(f"worker {w} is already dead")
+        if len(self.failed()) >= self.policy.max_failed:
+            raise MembershipError(
+                f"killing worker {w} would exceed "
+                f"max_failed={self.policy.max_failed} concurrent "
+                f"failures (dead: {sorted(self.failed())})")
+        self.state[w] = self.DEAD
+        self.strikes[w] = 0
+        self._record("kill", w)
+
+    def demote(self, w: int) -> bool:
+        """straggler -> dead, respecting the ``max_failed`` cap.
+        Returns whether the demote actually happened."""
+        self._check_worker(w)
+        if self.state[w] == self.DEAD:
+            raise MembershipError(f"worker {w} is already dead")
+        if len(self.failed()) >= self.policy.max_failed:
+            return False
+        self.state[w] = self.DEAD
+        self.strikes[w] = 0
+        self._record("demote", w)
+        return True
+
+    def rejoin(self, w: int) -> ReplanReport:
+        """dead -> live, with the elastic-replan receipt recorded."""
+        self._check_worker(w)
+        if self.state[w] != self.DEAD:
+            raise MembershipError(
+                f"worker {w} is {self.state[w]}; only dead workers "
+                "rejoin")
+        # same-K re-admission: mu_target pins factorize_cluster to the
+        # original (q, k), so the receipt certifies zero data movement
+        rep = elastic_replan(self.q, self.k, self.K,
+                             mu_target=(self.k - 1) / self.K,
+                             gamma=self.gamma)
+        self.replans.append(rep)
+        self.state[w] = self.LIVE
+        self.strikes[w] = 0
+        self._record("rejoin", w)
+        return rep
+
+    # -- detection ------------------------------------------------------- #
+    def observe(self, timings: dict[int, float]) -> list[int]:
+        """Feed one wave of per-worker map seconds; returns workers
+        demoted by this observation. Dead workers are ignored; a clean
+        wave clears a worker's strikes (the detector demands
+        ``patience`` CONSECUTIVE slow waves, so one GC pause or page
+        fault never evicts a healthy worker)."""
+        pol = self.policy
+        live_t = {int(w): float(t) for w, t in timings.items()
+                  if self.state[int(w)] != self.DEAD}
+        demoted: list[int] = []
+        if not live_t:
+            return demoted
+        med = float(np.median(list(live_t.values())))
+        if med < pol.min_wave_s:
+            return demoted      # unmeasurable wave: no verdict either way
+        for w, t in live_t.items():
+            timed_out = (pol.abs_timeout_s is not None
+                         and t > pol.abs_timeout_s)
+            slow = med > 0 and t > pol.rel_threshold * med
+            if timed_out or slow:
+                self.strikes[w] += 1
+                if self.state[w] == self.LIVE:
+                    self.state[w] = self.STRAGGLER
+                    self._record("flag", w)
+                if pol.demote and self.strikes[w] >= pol.patience:
+                    if self.demote(w):
+                        demoted.append(w)
+            else:
+                self.strikes[w] = 0
+                if self.state[w] == self.STRAGGLER:
+                    self.state[w] = self.LIVE
+                    self._record("clear", w)
+        return demoted
+
+
+class ElasticController:
+    """Wave-boundary control loop between a :class:`Membership` and a
+    stream (``JobStream(elastic=...)``).
+
+    The stream calls :meth:`wave_start` from its map-prefetch thread
+    when it builds each batch's engine, and :meth:`current_failed` +
+    :meth:`wave_timings` from the main thread around each batch's
+    shuffle+reduce — one lock serializes the two lanes. Under
+    pipelining, batch ``t+1``'s engine may be built before batch ``t``'s
+    timings arrive; detection therefore lands one batch late at worst,
+    and correctness never depends on WHEN a membership change is seen:
+    the stream re-targets every engine against the current survivor set
+    right before its shuffle, and degraded output is bitwise-identical
+    to healthy output (DESIGN.md §11/§14).
+
+    Subclass hooks (both called under the lock):
+    ``on_wave_start(wave)`` — apply scripted churn (tests/chaos.py);
+    ``on_wave_timings(wave, timings) -> timings`` — perturb observed
+    timings before they reach the detector.
+    """
+
+    def __init__(self, membership: Membership):
+        self.membership = membership
+        self._lock = threading.Lock()
+        self.waves = 0                 # batches started
+        self.migrations = 0            # engine re-targets (stream-fed)
+
+    # -- subclass hooks -------------------------------------------------- #
+    def on_wave_start(self, wave: int) -> None:
+        pass
+
+    def on_wave_timings(self, wave: int,
+                        timings: dict[int, float]) -> dict[int, float]:
+        return timings
+
+    # -- stream interface ------------------------------------------------ #
+    def wave_start(self, wave: int) -> frozenset:
+        with self._lock:
+            self.waves = max(self.waves, wave + 1)
+            self.on_wave_start(wave)
+            return self.membership.failed()
+
+    def current_failed(self) -> frozenset:
+        with self._lock:
+            return self.membership.failed()
+
+    def wave_timings(self, wave: int, map_times) -> list[int]:
+        """Feed a completed batch's per-server map seconds (live
+        workers only) through the straggler detector."""
+        with self._lock:
+            failed = self.membership.failed()
+            timings = {s: float(map_times[s])
+                       for s in range(self.membership.K)
+                       if s not in failed}
+            timings = self.on_wave_timings(wave, timings)
+            return self.membership.observe(timings)
+
+
+def retarget_engine(eng: CAMREngine, failed) -> CAMREngine:
+    """Swap an engine's shuffle schedule to the survivor set ``failed``
+    WITHOUT recomputing its map phase.
+
+    Returns ``eng`` unchanged when the set already matches; otherwise a
+    fresh engine (degraded or healthy) whose re-lowering comes from the
+    warm :data:`SCHEDULE_CACHE` and which ADOPTS the old engine's
+    mapped aggregates — the recovery memory model of DESIGN.md §14: a
+    membership change costs one cached table lookup, never a re-map.
+    """
+    failed = set(int(s) for s in failed) if failed else set()
+    have = set(getattr(eng, "failed", set()) or set())
+    if failed == have:
+        return eng
+    label_perm = eng.placement.label_perm
+    if failed:
+        new = DegradedCAMREngine(eng.cfg, eng.map_fn, failed,
+                                 combine=eng.combine,
+                                 label_perm=label_perm)
+    else:
+        new = CAMREngine(eng.cfg, eng.map_fn, combine=eng.combine,
+                         label_perm=label_perm)
+    # adopt map-phase state: aggregates, value metadata, timings. The
+    # shuffle/reduce run entirely off these plus the (new) lowering.
+    new.servers = eng.servers
+    new._value_dim = eng._value_dim
+    new._dtype = eng._dtype
+    new.map_times = eng.map_times
+    new.trace = eng.trace
+    return new
+
+
+def degraded_shuffle_host(program, failed, contribs) -> np.ndarray:
+    """Host-side degraded executor over SPMD contribution tensors.
+
+    Interprets the survivor-set re-lowering of ``program`` (served from
+    :data:`SCHEDULE_CACHE`) against stacked per-worker contributions
+    ``[K, J_own, k-1, K, d]`` — the exact input of
+    :func:`repro.core.collective.camr_shuffle` — and returns logical
+    outputs ``[K, J, d]``: row ``s`` is the fully-aggregated shard
+    ``s`` of every job, computed on ``s``'s migrate target when ``s``
+    failed. Rows of failed workers in ``contribs`` are NEVER read
+    (failed means silent after map), and because every route folds in
+    the canonical combine order the output is BITWISE equal to the
+    healthy shuffle of the same contributions (DESIGN.md §11).
+
+    This is the :class:`~repro.core.collective.ShuffleStream` degraded
+    lane — collective.py imports it lazily (runtime layering: the SPMD
+    stream borrows the fault runtime's interpreter rather than lowering
+    a second degraded executor).
+    """
+    deg = SCHEDULE_CACHE.degraded(program, set(failed))
+    design, pl = program.design, program.placement
+    q, k, K = program.q, program.k, program.K
+    J = design.J
+    J_own = q ** (k - 2)
+    contribs = np.asarray(contribs)
+    d = contribs.shape[-1]
+    if contribs.shape != (K, J_own, k - 1, K, d):
+        raise ValueError(f"contribs shape {contribs.shape} != "
+                         f"{(K, J_own, k - 1, K, d)}")
+    dead = deg.failed
+
+    # (server, job, batch) -> [K, d] per-function-shard aggregate; only
+    # survivor rows enter the table, so a read of dead data is a KeyError
+    agg: dict = {}
+    for s in range(K):
+        if s in dead:
+            continue
+        for a in range(J_own):
+            j = int(program.owned_jobs[s, a])
+            for b in range(k - 1):
+                t = int(program.stored_batches[s, a, b])
+                agg[(s, j, t)] = contribs[s, a, b]
+    # stages 1+2: coded rows deliver from the first co-holder (all live);
+    # degraded rows follow the uncoded unicast plan
+    recv_batch: dict = {}           # (rcv, job, batch, owner) -> [d]
+    for row in deg.coded_rows:
+        G = program.group_members(int(row))
+        for kp, j, t in program.coded_chunks(int(row)):
+            holder = next(s for s in G if s != kp)
+            recv_batch[(kp, j, t, kp)] = agg[(holder, j, t)][kp]
+    for _row, sends in deg.uncoded:
+        for holder, rcv, j, t, owner in sends:
+            recv_batch[(rcv, j, t, owner)] = agg[(holder, j, t)][owner]
+    # stage 3: sender-side ascending folds; entries sharing a key are
+    # combined in s3 iteration order (the engine's acc_map contract)
+    recv_rest: dict = {}            # (rcv, job, owner) -> [d]
+    for snd, rcv, j, owner, batches in deg.s3:
+        acc = None
+        for t in batches:
+            v = agg[(snd, j, t)][owner]
+            acc = v if acc is None else acc + v
+        key = (rcv, j, owner)
+        recv_rest[key] = (acc if key not in recv_rest
+                          else recv_rest[key] + acc)
+    # reduce: canonical order per DegradedCAMREngine.reduce_phase, with
+    # migrated rows normalized back to their logical slots
+    out = np.zeros((K, J, d), contribs.dtype)
+    for s_orig in range(K):
+        s = int(deg.migrate[s_orig])
+        migrated = s != s_orig
+        for j in range(J):
+            if migrated:
+                cls = design.class_of(s_orig)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == cls]
+                tl = pl.batch_of_label(j, l)
+                out[s_orig, j] = (recv_batch[(s, j, tl, s_orig)]
+                                  + recv_rest[(s, j, s_orig)])
+            elif design.is_owner(s, j):
+                tmiss = pl.batch_of_label(j, s)
+                rest = None
+                for t in range(k):
+                    if t != tmiss:
+                        v = agg[(s, j, t)][s]
+                        rest = v if rest is None else rest + v
+                out[s_orig, j] = recv_batch[(s, j, tmiss, s)] + rest
+            else:
+                cls = design.class_of(s)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == cls]
+                tl = pl.batch_of_label(j, l)
+                out[s_orig, j] = (recv_batch[(s, j, tl, s)]
+                                  + recv_rest[(s, j, s)])
+    return out

@@ -35,6 +35,7 @@ is the host-side runtime and the bit-exact reference for it.
 
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -115,6 +116,9 @@ class StreamReport:
     cache_hits: int       # SCHEDULE_CACHE hits during the run
     cache_misses: int     # lowerings actually paid during the run
     pipelined: bool
+    migrations: int = 0   # in-flight engine re-targets (elastic runs)
+    batch_times: list = field(default_factory=list)  # wall s per batch
+                          # completion (elastic recovery-gap signal)
 
 
 class JobStream:
@@ -136,6 +140,18 @@ class JobStream:
     pipeline
         Overlap map/aggregate of the next batch with shuffle+reduce of
         the current one on a prefetch thread (default on).
+    elastic
+        Live-churn controller (:class:`repro.runtime.fault
+        .ElasticController`, or a bare :class:`~repro.runtime.fault
+        .Membership` which gets wrapped): workers may die, straggle and
+        rejoin BETWEEN batches. Each batch's engine is built against
+        the survivor set at its map time, re-targeted (zero map
+        recompute, warm-cache re-lowering) right before its shuffle if
+        membership moved while it was in flight, and its per-server map
+        timings feed the controller's straggler detector. Results come
+        back in LOGICAL slots — bitwise-identical to the healthy serial
+        oracle for every churn schedule (DESIGN.md §14). Mutually
+        exclusive with the static ``failed`` set.
     """
 
     DEFAULT_WAVE_BATCH = 4
@@ -143,10 +159,21 @@ class JobStream:
     def __init__(self, *, failed: set[int] | None = None,
                  batching: bool = True,
                  wave_batch: int | None = DEFAULT_WAVE_BATCH,
-                 pipeline: bool = True):
+                 pipeline: bool = True, elastic=None):
         if wave_batch is not None and wave_batch < 1:
             raise ValueError("wave_batch must be >= 1 (or None for "
                              "no cap)")
+        if elastic is not None and failed:
+            raise ValueError(
+                "failed= is a static survivor set; elastic= manages "
+                "membership live — pass the kill to the controller "
+                "(membership.kill) instead of both")
+        if elastic is not None:
+            from repro.runtime.fault import (ElasticController,
+                                             Membership)
+            if isinstance(elastic, Membership):
+                elastic = ElasticController(elastic)
+        self.elastic = elastic
         self.failed = set(failed) if failed else None
         self.batching = batching
         self.wave_batch = wave_batch
@@ -184,11 +211,14 @@ class JobStream:
     # ------------------------------------------------------------------ #
     # one batch = one engine pass over d-stacked waves
     # ------------------------------------------------------------------ #
-    def _make_engine(self, specs: list[JobSpec], idxs: list[int]):
+    def _make_engine(self, specs: list[JobSpec], idxs: list[int],
+                     failed=None):
         """Build the batched engine + datasets for one batch.
 
         Returns ``(engine, datasets, widths)`` where ``widths[w]`` is
         filled with wave ``w``'s value width after the map phase runs.
+        ``failed`` overrides the stream's static set (elastic runs pass
+        the controller's survivor set at map time).
         """
         batch = [specs[i] for i in idxs]
         cfg = batch[0].cfg
@@ -230,9 +260,10 @@ class JobStream:
             [tuple(sp.datasets[j][n] for sp in batch) for n in range(N)]
             for j in range(J)
         ]
-        if self.failed:
+        failed = self.failed if failed is None else (set(failed) or None)
+        if failed:
             from repro.runtime.fault import DegradedCAMREngine
-            eng = DegradedCAMREngine(cfg, map_fn, self.failed,
+            eng = DegradedCAMREngine(cfg, map_fn, failed,
                                      combine=batch[0].combine)
         else:
             eng = CAMREngine(cfg, map_fn, combine=batch[0].combine)
@@ -268,41 +299,87 @@ class JobStream:
         results: list = [None] * len(specs)
         batches = self._plan_batches(specs)
         s0 = SCHEDULE_CACHE.stats()
+        ctrl = self.elastic
+        migrations = 0
+        batch_times: list[float] = []
+        t_mark = [time.perf_counter()]
 
-        def prepare(idxs):
+        def prepare(bi, idxs):
             # dataset validation + map phase: the prefetch-lane half of
-            # the pipeline
-            eng, datasets, widths = self._make_engine(specs, idxs)
+            # the pipeline. Elastic runs map against the survivor set
+            # at map time; a later membership change is absorbed by the
+            # re-target in finish (the map state is survivor-agnostic —
+            # every server maps its stored batches regardless).
+            failed = ctrl.wave_start(bi) if ctrl is not None else None
+            eng, datasets, widths = self._make_engine(specs, idxs,
+                                                      failed=failed)
             eng.map_phase(datasets)
             return eng, widths, idxs
 
-        def finish(eng, widths, idxs):
+        def finish(bi, eng, widths, idxs):
+            nonlocal migrations
+            if ctrl is not None:
+                # membership may have moved while this batch was in
+                # flight: swap the shuffle schedule to the CURRENT
+                # survivor set (warm-cache lookup, adopts the mapped
+                # aggregates — no map recompute)
+                from repro.runtime.fault import retarget_engine
+                eng2 = retarget_engine(eng, ctrl.current_failed())
+                if eng2 is not eng:
+                    migrations += 1
+                    eng = eng2
             eng.shuffle_phase()
             res = eng.reduce_phase()
+            if ctrl is not None and getattr(eng, "failed", None):
+                res = self._logical_slots(eng, res)
             split = self._split_results(res, widths)
             for w, spec_idx in enumerate(idxs):
                 results[spec_idx] = split[w]
             self.last_engines.append(eng)
+            if ctrl is not None:
+                ctrl.wave_timings(bi, eng.map_times)
+            now = time.perf_counter()
+            batch_times.append(now - t_mark[0])
+            t_mark[0] = now
 
         pipelined = self.pipeline and len(batches) > 1
         if pipelined:
             # double buffer: while batch t shuffles+reduces here, batch
             # t+1 maps on the worker — at most 2 engines alive
             with ThreadPoolExecutor(max_workers=1) as pool:
-                fut = pool.submit(prepare, batches[0])
+                fut = pool.submit(prepare, 0, batches[0])
                 for t in range(len(batches)):
                     eng, widths, idxs = fut.result()
                     if t + 1 < len(batches):
-                        fut = pool.submit(prepare, batches[t + 1])
-                    finish(eng, widths, idxs)
+                        fut = pool.submit(prepare, t + 1, batches[t + 1])
+                    finish(t, eng, widths, idxs)
         else:
-            for idxs in batches:
-                finish(*prepare(idxs))
+            for t, idxs in enumerate(batches):
+                finish(t, *prepare(t, idxs))
 
+        if ctrl is not None:
+            ctrl.migrations += migrations
         s1 = SCHEDULE_CACHE.stats()
         self.last_report = StreamReport(
             waves=len(specs), batches=len(batches),
             cache_hits=s1["hits"] - s0["hits"],
             cache_misses=s1["misses"] - s0["misses"],
-            pipelined=pipelined)
+            pipelined=pipelined, migrations=migrations,
+            batch_times=batch_times)
         return results
+
+    @staticmethod
+    def _logical_slots(eng, results) -> list:
+        """Degraded engine results -> logical per-server slots.
+
+        A degraded reduce leaves a failed server's functions on its
+        migrate target (``results[failed] == {}``). Elastic callers are
+        owed the HEALTHY result shape — server ``s``'s functions in
+        slot ``s`` — and since degraded values are bitwise-identical to
+        healthy values (the canonical-order contract, DESIGN.md §11),
+        relocating them restores the exact serial-oracle output."""
+        K = eng.cfg.K
+        return [{key: val
+                 for key, val in results[eng.migrate_target(s)].items()
+                 if key[1] % K == s}
+                for s in range(K)]

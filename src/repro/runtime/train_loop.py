@@ -182,9 +182,12 @@ class MultiModelCAMRTrainer:
         it.
     failed
         Failed/straggling worker set: ``mode="camr"`` steps run the
-        degraded survivor-set schedule (runtime/fault.py). Recovery is
-        exact — a degraded step leaves the trajectory bit-identical to
-        the healthy one.
+        degraded survivor-set schedule (runtime/fault.py), and
+        ``mode="camr_spmd"`` steps route through the stream's degraded
+        host lane (:meth:`~repro.core.collective.ShuffleStream
+        .degrade` — no retrace, DESIGN.md §14). Recovery is exact — a
+        degraded step leaves the trajectory bit-identical to the
+        healthy one; flip membership live via :meth:`set_failed`.
     spmd_oracle
         When true, every ``camr_spmd`` step ALSO runs the numpy engine
         on the same memoized gradients and asserts the device result
@@ -360,6 +363,20 @@ class MultiModelCAMRTrainer:
         report.bytes_total += eng.trace.total_bytes()
         return self._assemble(results)
 
+    def set_failed(self, failed) -> None:
+        """Live membership change between steps: subsequent ``camr``
+        steps re-lower from the warm schedule cache, and an existing
+        SPMD stream swaps to its degraded lane (or back) WITHOUT
+        retracing — ``stream.compiles`` stays flat across kill/rejoin
+        (DESIGN.md §14). Recovery is exact: degraded steps leave the
+        parameter trajectory bit-identical to the healthy one."""
+        self.failed = set(failed) if failed else None
+        if self._stream is not None:
+            if self.failed:
+                self._stream.degrade(self.failed)
+            else:
+                self._stream.restore()
+
     def _spmd_stream(self):
         if self._stream is None:
             from repro.core.collective import ShuffleStream
@@ -374,6 +391,11 @@ class MultiModelCAMRTrainer:
                 axis_name=self.axis_name, mode="batched",
                 router=self.router, codec=self.codec,
                 use_kernels=self.use_kernels)
+        # reconcile with the trainer's failed set (covers both a lazy
+        # first build under failure and a direct self.failed mutation)
+        want = frozenset(self.failed or ())
+        if want != self._stream.failed:
+            self._stream.degrade(want) if want else self._stream.restore()
         return self._stream
 
     def _build_contribs(self, map_fn, datasets) -> np.ndarray:
@@ -410,11 +432,6 @@ class MultiModelCAMRTrainer:
         return out
 
     def _sync_spmd(self, map_fn, datasets, report):
-        if self.failed:
-            raise ValueError(
-                "mode='camr_spmd' executes the healthy SPMD collective; "
-                "degraded survivor-set steps run through mode='camr' "
-                "(runtime/fault.py re-lowers the schedule)")
         stream = self._spmd_stream()
         contribs = self._build_contribs(map_fn, datasets)
         out = stream.sync(jnp.asarray(contribs))   # device [K, J, d]

@@ -1,0 +1,162 @@
+"""Deterministic chaos harness for the elastic runtime (DESIGN.md §14).
+
+A :class:`FaultPlan` scripts worker churn against wave indices —
+``Kill(wave, worker)``, ``Rejoin(wave, worker)``, and
+``Straggle(wave, worker, waves, delay_s)`` — and
+:class:`ChaosController` replays it through the
+:class:`~repro.runtime.fault.ElasticController` hooks: kills/rejoins
+fire when the stream starts the scripted wave, straggles inflate the
+observed map timings the straggler detector sees. Everything is
+deterministic: no randomness, no real clocks — the synthetic
+``delay_s`` rides on top of whatever the engine measured, so a plan
+replays identically on any machine.
+
+The contract every plan must satisfy (asserted by
+:func:`assert_bit_identical` in tests/test_elastic.py's sweep): the
+elastic stream's output is BITWISE equal to the healthy serial oracle
+for every churn schedule, and — after
+:meth:`~repro.core.schedule.ScheduleCache.warm_survivors` — recovery
+never pays a lowering.
+
+No ``test_`` prefix: this module is the harness, not the suite.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.engine import CAMRConfig, CAMREngine
+from repro.runtime.fault import (ElasticController, Membership,
+                                 StragglerPolicy)
+from repro.runtime.jobstream import JobSpec, JobStream
+
+__all__ = ["Kill", "Rejoin", "Straggle", "FaultPlan", "ChaosController",
+           "make_specs", "serial_oracle", "run_plan",
+           "assert_bit_identical"]
+
+
+@dataclass(frozen=True)
+class Kill:
+    """Worker drops dead when wave ``wave`` starts (silent after map)."""
+
+    wave: int
+    worker: int
+
+
+@dataclass(frozen=True)
+class Rejoin:
+    """Dead worker re-admitted when wave ``wave`` starts (pure
+    re-placement: the replan receipt proves zero data movement)."""
+
+    wave: int
+    worker: int
+
+
+@dataclass(frozen=True)
+class Straggle:
+    """Worker's observed map time inflated by ``delay_s`` for waves
+    ``wave .. wave + waves - 1`` — what the straggler detector sees,
+    not a real sleep, so plans replay deterministically."""
+
+    wave: int
+    worker: int
+    waves: int = 1
+    delay_s: float = 5.0
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A named, scripted churn schedule (a tuple of events)."""
+
+    events: tuple
+    name: str = ""
+
+    def workers(self) -> frozenset:
+        return frozenset(ev.worker for ev in self.events)
+
+
+class ChaosController(ElasticController):
+    """Replays a :class:`FaultPlan` through the elastic hooks.
+
+    Kills/rejoins apply exactly once, when their wave starts (under the
+    controller lock, so an in-flight batch's re-target sees them
+    atomically); straggles perturb the timing dict fed to
+    :meth:`Membership.observe`.
+    """
+
+    def __init__(self, plan: FaultPlan, membership: Membership):
+        super().__init__(membership)
+        self.plan = plan
+        self._applied: set = set()
+
+    def on_wave_start(self, wave: int) -> None:
+        for i, ev in enumerate(self.plan.events):
+            if i in self._applied or ev.wave != wave:
+                continue
+            if isinstance(ev, Kill):
+                self.membership.kill(ev.worker)
+                self._applied.add(i)
+            elif isinstance(ev, Rejoin):
+                self.membership.rejoin(ev.worker)
+                self._applied.add(i)
+
+    def on_wave_timings(self, wave, timings):
+        for ev in self.plan.events:
+            if (isinstance(ev, Straggle)
+                    and ev.wave <= wave < ev.wave + ev.waves
+                    and ev.worker in timings):
+                timings[ev.worker] = timings[ev.worker] + ev.delay_s
+        return timings
+
+
+# --------------------------------------------------------------------- #
+# plan driver
+# --------------------------------------------------------------------- #
+def _identity_map(job, sf):
+    return sf
+
+
+def make_specs(q: int, k: int, waves: int, d: int = 8,
+               seed: int = 0) -> list:
+    """Waves of pre-mapped values (map = identity), like the benches."""
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    Q = cfg.num_functions()
+    rng = np.random.default_rng(seed)
+    return [JobSpec(cfg, _identity_map,
+                    [[rng.standard_normal((Q, d)).astype(np.float32)
+                      for _ in range(cfg.N)] for _ in range(cfg.J)],
+                    name=f"wave{w}")
+            for w in range(waves)]
+
+
+def serial_oracle(specs) -> list:
+    """Healthy serial runs — the bit-identity reference for any churn."""
+    return [CAMREngine(sp.cfg, sp.map_fn, combine=sp.combine).run(
+        sp.datasets) for sp in specs]
+
+
+def run_plan(specs, plan: FaultPlan, *, policy=None, pipeline=False,
+             wave_batch=1):
+    """Run ``specs`` through an elastic JobStream under ``plan``.
+
+    Default policy disables timing-based demotion so scripted plans
+    stay deterministic (µs-scale map noise must not steal the
+    ``max_failed`` slot); straggler-detection tests pass an explicit
+    policy with ``abs_timeout_s`` instead. Returns
+    ``(results, stream, controller)``.
+    """
+    q, k = specs[0].cfg.q, specs[0].cfg.k
+    policy = policy or StragglerPolicy(demote=False)
+    ctrl = ChaosController(plan, Membership(q, k, policy=policy))
+    stream = JobStream(elastic=ctrl, wave_batch=wave_batch,
+                       pipeline=pipeline)
+    return stream.run(specs), stream, ctrl
+
+
+def assert_bit_identical(oracle, got, context="") -> None:
+    for w, (want, res) in enumerate(zip(oracle, got)):
+        for s, (a, b) in enumerate(zip(want, res)):
+            assert a.keys() == b.keys(), (context, w, s)
+            for key in a:
+                assert np.array_equal(a[key], b[key]), \
+                    (context, w, s, key)

@@ -1,14 +1,19 @@
 """Fault tolerance: degraded shuffle, straggler recovery, elastic replan,
 and the CAMR multi-model training integration."""
 
+import itertools
+
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
 from repro.core import loads
+from repro.core.designs import make_design
 from repro.core.engine import CAMRConfig, CAMREngine
+from repro.core.placement import make_placement
 from repro.data.pipeline import ShardedTokenPipeline
-from repro.runtime.fault import DegradedCAMREngine, elastic_replan
+from repro.runtime.fault import (DegradedCAMREngine, MembershipError,
+                                 elastic_replan)
 from repro.runtime.train_loop import MultiModelCAMRTrainer
 
 
@@ -95,6 +100,52 @@ def test_too_many_failures_rejected():
         DegradedCAMREngine(cfg, _linear_map(6), failed={0, 4})
 
 
+@pytest.mark.parametrize("q,k", [(2, 4), (3, 3), (2, 5)])
+def test_k_minus_one_failures_always_unrecoverable(q, k):
+    """Survivor-set edge: every batch lives on exactly k-1 servers, so
+    ANY k-1 concurrent failures either double up inside a parallel
+    class or wipe some batch's full holder set — exhaustively
+    rejected. (Recoverable k-2 sets exist: the parametrized recovery
+    test above runs them.)"""
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    Q = cfg.num_functions()
+    for combo in itertools.combinations(range(cfg.K), k - 1):
+        with pytest.raises(ValueError):
+            DegradedCAMREngine(cfg, _linear_map(Q), failed=set(combo))
+
+
+def test_single_group_loss_rejected():
+    """Losing one whole parallel class (a 'group' of q servers) is
+    never recoverable — those servers were each other's only same-class
+    migration targets."""
+    cfg = CAMRConfig(q=3, k=3, gamma=1)
+    d = make_design(3, 3)
+    cls = sorted(d.parallel_classes[0])
+    with pytest.raises(ValueError, match="parallel class|recompute"):
+        DegradedCAMREngine(cfg, _linear_map(cfg.num_functions()),
+                           failed=set(cls))
+
+
+def test_failed_set_frozen_after_lowering():
+    """Stacking a second failure onto a LIVE degraded engine must be a
+    hard error, not a silent mis-reduce: the re-lowered schedule still
+    routes through the newly-dead server. The error points at the
+    supported path (a fresh re-lowering via retarget_engine)."""
+    cfg = CAMRConfig(q=2, k=4, gamma=1)
+    ds = _datasets(cfg, dim=6)
+    eng = DegradedCAMREngine(cfg, _linear_map(cfg.num_functions()),
+                             failed={0})
+    eng.map_phase(ds)
+    eng.failed.add(7)                  # mutation after lowering
+    with pytest.raises(MembershipError, match="retarget_engine"):
+        eng.shuffle_phase()
+    with pytest.raises(MembershipError, match="frozen|re-lowered"):
+        eng.reduce_phase()
+    eng.failed.discard(7)              # matching set runs fine again
+    eng.shuffle_phase()
+    eng.reduce_phase()
+
+
 def test_elastic_replan():
     r = elastic_replan(2, 3, 12)             # 6 -> 12 servers
     assert r.new_qk[0] * r.new_qk[1] == 12
@@ -112,6 +163,30 @@ def test_elastic_replan_mu_target():
     q, k = r.new_qk
     assert q * k == 100
     assert abs((k - 1) / 100 - 0.04) < 0.02
+
+
+@pytest.mark.parametrize("q_old,k_old", [(2, 3), (3, 3), (2, 4)])
+@pytest.mark.parametrize("q_new,k_new",
+                         [(2, 3), (3, 2), (2, 4), (4, 3), (2, 5)])
+def test_elastic_replan_invariants(q_old, k_old, q_new, k_new):
+    """Deterministic grid over the replan invariants (the hypothesis
+    twin in tests/test_property.py walks a randomized domain): pinning
+    ``mu_target`` selects the intended factorization, re-planning is a
+    pure re-placement (never re-encodes — the report is a placement
+    diff, bounded in [0, 1]), replan of a replan moves nothing, and
+    every subfile keeps k_new - 1 >= 1 live owners afterwards."""
+    K_new = q_new * k_new
+    r = elastic_replan(q_old, k_old, K_new,
+                       mu_target=(k_new - 1) / K_new)
+    assert r.new_qk == (q_new, k_new)
+    assert 0.0 <= r.moved_fraction <= 1.0
+    assert r.new_storage_fraction == pytest.approx((k_new - 1) / K_new)
+    r2 = elastic_replan(q_new, k_new, K_new,
+                        mu_target=(k_new - 1) / K_new)
+    assert r2.new_qk == (q_new, k_new)
+    assert r2.moved_fraction == 0.0            # idempotent
+    M = make_placement(make_design(q_new, k_new), 1).placement_matrix()
+    assert (M.sum(axis=0) == k_new - 1).all()  # every subfile owned
 
 
 # --------------------------------------------------------------------- #

@@ -107,3 +107,31 @@ def test_aggregation_reduces_values_sent(q, k):
     N = k * gamma
     cdc_total_values = loads.cdc_load(k - 1, k * q) * N
     assert l_camr < cdc_total_values or (q == 2 and k == 2)
+
+
+@given(st.tuples(st.integers(2, 4), st.integers(2, 5)),
+       st.tuples(st.integers(2, 4), st.integers(2, 5)))
+@settings(max_examples=25, deadline=None)
+def test_elastic_replan_properties(old_qk, new_qk):
+    """Elastic re-planning (runtime/fault.py) is a pure re-placement:
+    the pinned mu_target selects exactly the requested factorization,
+    nothing re-encodes (the report is a placement diff bounded in
+    [0, 1]), replan of a replan moves nothing (idempotence — the
+    Membership.rejoin receipt relies on this), and the new placement
+    leaves every subfile with k_new - 1 >= 1 live owners."""
+    from repro.runtime.fault import elastic_replan
+
+    q_old, k_old = old_qk
+    q_new, k_new = new_qk
+    K_new = q_new * k_new
+    r = elastic_replan(q_old, k_old, K_new,
+                       mu_target=(k_new - 1) / K_new)
+    assert r.new_qk == (q_new, k_new)
+    assert 0.0 <= r.moved_fraction <= 1.0
+    assert abs(r.new_storage_fraction - (k_new - 1) / K_new) < 1e-12
+    r2 = elastic_replan(q_new, k_new, K_new,
+                        mu_target=(k_new - 1) / K_new)
+    assert r2.new_qk == (q_new, k_new)
+    assert r2.moved_fraction == 0.0
+    M = make_placement(make_design(q_new, k_new), 1).placement_matrix()
+    assert (M.sum(axis=0) == k_new - 1).all()
