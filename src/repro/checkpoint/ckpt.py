@@ -21,6 +21,8 @@ import queue
 import shutil
 import threading
 import time
+import warnings
+import zlib
 
 import numpy as np
 
@@ -55,11 +57,17 @@ def save_checkpoint(path: str, tree, *, step: int, metadata: dict | None
         arr = np.asarray(val)
         fn = f"{key}.npy"
         # store raw bytes: robust for non-native dtypes (bf16, fp8, ...)
-        np.save(os.path.join(tmp, fn),
-                np.frombuffer(arr.tobytes(), np.uint8))
+        fp = os.path.join(tmp, fn)
+        np.save(fp, np.frombuffer(arr.tobytes(), np.uint8))
+        # crc32 covers the FILE as written (npy header included), so
+        # on-disk corruption anywhere in it is caught at resume even
+        # before the payload is parsed; sha256 stays the payload hash
+        with open(fp, "rb") as fh:
+            crc = zlib.crc32(fh.read())
         man["leaves"][key] = {
             "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+            "crc32": crc,
         }
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(man, f, indent=1)
@@ -69,25 +77,25 @@ def save_checkpoint(path: str, tree, *, step: int, metadata: dict | None
     return final
 
 
-def load_checkpoint(path: str, tree_like, *, step: int | None = None,
-                    verify: bool = True):
-    """Restore into the structure of ``tree_like``. step=None -> latest.
-
-    Returns (tree, manifest_metadata). Raises on hash mismatch when
-    ``verify`` (detects torn/corrupt writes on real storage)."""
-    if step is None:
-        steps = available_steps(path)
-        if not steps:
-            raise FileNotFoundError(f"no checkpoints under {path}")
-        step = steps[-1]
+def _load_step(path: str, step: int, flat_keys, verify: bool):
+    """Load + verify one step dir. Raises IOError on any integrity
+    failure (crc/hash mismatch, unreadable or missing leaf file)."""
     d = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(d, _MANIFEST)) as f:
         man = json.load(f)
-    flat_keys = list(_flatten(tree_like))
     vals = []
     for key in flat_keys:
         ent = man["leaves"][key]
-        raw = np.load(os.path.join(d, ent["file"]))
+        fp = os.path.join(d, ent["file"])
+        if verify and "crc32" in ent:      # absent in pre-crc manifests
+            with open(fp, "rb") as fh:
+                if zlib.crc32(fh.read()) != ent["crc32"]:
+                    raise IOError(
+                        f"checkpoint leaf {key} crc32 mismatch ({fp})")
+        try:
+            raw = np.load(fp)
+        except (OSError, ValueError) as e:
+            raise IOError(f"checkpoint leaf {key} unreadable: {e}")
         if verify:
             h = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
             if h != ent["sha256"]:
@@ -95,6 +103,44 @@ def load_checkpoint(path: str, tree_like, *, step: int | None = None,
         arr = np.frombuffer(raw.tobytes(), dtype=np.dtype(ent["dtype"])
                             ).reshape(ent["shape"])
         vals.append(arr)
+    return vals, man
+
+
+def load_checkpoint(path: str, tree_like, *, step: int | None = None,
+                    verify: bool = True):
+    """Restore into the structure of ``tree_like``. step=None -> latest
+    INTACT step: a checkpoint that fails verification (on-disk
+    corruption caught by the per-file crc32 or the payload sha256) is
+    skipped with an actionable warning and the next-newest one is
+    tried, so a torn write never strands a resume (DESIGN.md §15). An
+    EXPLICIT ``step`` still raises on corruption — asking for a
+    specific state and silently getting another would be worse than
+    failing.
+
+    Returns (tree, manifest_metadata). Raises on hash mismatch when
+    ``verify`` (detects torn/corrupt writes on real storage)."""
+    flat_keys = list(_flatten(tree_like))
+    if step is not None:
+        vals, man = _load_step(path, step, flat_keys, verify)
+    else:
+        steps = available_steps(path)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+        vals = man = None
+        for s in reversed(steps):
+            try:
+                vals, man = _load_step(path, s, flat_keys, verify)
+                break
+            except (OSError, KeyError, ValueError) as e:
+                warnings.warn(
+                    f"checkpoint step_{s:08d} under {path} failed "
+                    f"verification ({e}); falling back to the newest "
+                    f"intact step. Delete that directory to stop "
+                    f"resuming past it.", RuntimeWarning, stacklevel=2)
+        if vals is None:
+            raise IOError(
+                f"no intact checkpoint under {path}: every step in "
+                f"{steps} failed verification")
     leaves, treedef = jax.tree_util.tree_flatten(tree_like)
     restored = jax.tree_util.tree_unflatten(
         treedef, [v.reshape(l.shape) for v, l in zip(vals, leaves)])

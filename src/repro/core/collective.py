@@ -72,8 +72,8 @@ from jax import lax
 
 from .designs import ResolvableDesign
 from .placement import Placement
-from .schedule import (SCHEDULE_CACHE, ShuffleProgram, StageTables,
-                       payload_words)
+from .schedule import (EXEC_CACHE, SCHEDULE_CACHE, ShuffleProgram,
+                       StageTables, payload_words)
 
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
@@ -631,7 +631,7 @@ class ShuffleStream:
                  axis_name: str = "camr", depth: int = 2,
                  wave_batch: int = 1, mode: str = "batched",
                  router: str = "all_to_all", codec: str = "fused",
-                 use_kernels=None):
+                 use_kernels=None, degraded_lane: str = "device"):
         if k < 3:
             raise ValueError("TPU collective path requires k >= 3")
         if d % (k - 1):
@@ -656,12 +656,16 @@ class ShuffleStream:
             raise ValueError(f"unknown codec {codec!r}")
         self.codec = codec
         self.use_kernels = use_kernels
+        if degraded_lane not in ("device", "host"):
+            raise ValueError(f"unknown degraded_lane {degraded_lane!r}")
+        self.degraded_lane = degraded_lane
         self._jitted: dict[int, object] = {}   # W -> compiled executor
         self._pending: list = []               # waves awaiting dispatch
         self._in_flight: deque = deque()       # (out, W, dispatch time)
         self._done: list = []                  # host [K, J, d] outputs
         self.dispatches = 0                    # program executions issued
         self.compiles = 0                      # executors traced (per W)
+        self.degraded_compiles = 0             # degraded execs built (§15)
         self._failed: frozenset = frozenset()  # current survivor-set gap
         self.swaps = 0                         # degrade/restore events
         self.wave_times: list[float] = []      # dispatch->collect wall s
@@ -703,11 +707,14 @@ class ShuffleStream:
         :data:`SCHEDULE_CACHE`. Waves already in flight were dispatched
         healthy and complete unchanged — a real survivor set only
         affects exchanges issued after the membership change. Degraded
-        waves run the fault runtime's host interpreter
-        (:func:`repro.runtime.fault.degraded_shuffle_host`) over the
-        same contribution tensors; the compiled healthy executors stay
-        resident, so :meth:`restore` is retrace-free (``compiles``
-        flat).
+        waves run a COMPILED dense survivor-set executor on device
+        (:func:`repro.runtime.fault.build_degraded_executor`, served
+        from the process-wide EXEC_CACHE — zero retraces after
+        :meth:`warm_degraded_execs`), bitwise-identical to the fault
+        runtime's host interpreter, which remains available as the
+        ``degraded_lane="host"`` fallback/oracle. The compiled healthy
+        executors stay resident either way, so :meth:`restore` is
+        retrace-free (``compiles`` flat).
         """
         failed = frozenset(int(s) for s in failed)
         if not failed:
@@ -727,11 +734,66 @@ class ShuffleStream:
             self._failed = frozenset()
             self.swaps += 1
 
+    def _degraded_fn(self, W: int, dtype, failed=None):
+        """The compiled dense degraded executor for stack width ``W``
+        and value ``dtype``, AOT-built into the process-wide
+        EXEC_CACHE (so a later stream of the same shape — or a
+        :meth:`warm_degraded_execs` call before any failure — makes a
+        mid-stream degrade completely build-free)."""
+        failed = self._failed if failed is None else failed
+        key = ("spmd_degraded", self.q, self.k, self.K, W * self.d,
+               str(jnp.dtype(dtype)), tuple(sorted(failed)))
+
+        def build():
+            from repro.runtime.fault import build_degraded_executor
+            prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                          d=W * self.d)
+            self.degraded_compiles += 1
+            return build_degraded_executor(prog, failed, W * self.d,
+                                           dtype)
+
+        return EXEC_CACHE.get(key, build)
+
+    def warm_degraded_execs(self, *, max_failures: int = 1,
+                            widths=(1,), dtype=np.float32) -> int:
+        """Pre-compile the dense degraded executor of every recoverable
+        survivor set with up to ``max_failures`` concurrent failures
+        (x stack ``widths`` x ``dtype``), alongside the schedule
+        warm-up of :meth:`~repro.core.schedule.ScheduleCache
+        .warm_survivors` — after this, a mid-stream :meth:`degrade`
+        pays neither a lowering nor a compile on the recovery critical
+        path (DESIGN.md §15). Returns the number of executables now
+        resident."""
+        from itertools import combinations
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                      d=self.d)
+        SCHEDULE_CACHE.warm_survivors(prog, max_failures=max_failures)
+        warmed = 0
+        for r in range(1, max_failures + 1):
+            for combo in combinations(range(self.K), r):
+                fs = frozenset(combo)
+                try:
+                    SCHEDULE_CACHE.degraded(prog, set(fs))
+                except ValueError:
+                    continue                   # unrecoverable: skip
+                for W in widths:
+                    self._degraded_fn(W, dtype, failed=fs)
+                    warmed += 1
+        return warmed
+
     def _degraded_exec(self, buf, W: int):
-        """Host-side degraded wave: interpret the survivor-set
-        re-lowering over the stacked [K, J_own, k-1, K, W*d] tensor.
-        Output is bitwise-identical to the healthy executor's
-        (DESIGN.md §11), in logical slots."""
+        """Degraded wave over the stacked [K, J_own, k-1, K, W*d]
+        tensor, bitwise-identical to the healthy executor's output
+        (DESIGN.md §11), in logical slots. ``degraded_lane="device"``
+        dispatches the compiled dense executor (async, output stays on
+        device); ``"host"`` interprets the re-lowering in numpy — the
+        fallback and the oracle the device lane is gated against."""
+        if self.degraded_lane == "device":
+            dtype = getattr(buf, "dtype", None)
+            if dtype is None:
+                buf = np.asarray(buf)
+                dtype = buf.dtype
+            return self._degraded_fn(W, dtype)(jnp.asarray(buf))
         from repro.runtime.fault import degraded_shuffle_host
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
                                       d=W * self.d)
@@ -783,7 +845,9 @@ class ShuffleStream:
         across degrade/restore ``swaps``)."""
         return dict(dispatches=self.dispatches, compiles=self.compiles,
                     widths=sorted(self._jitted), swaps=self.swaps,
-                    failed=tuple(sorted(self._failed)))
+                    failed=tuple(sorted(self._failed)),
+                    degraded_compiles=self.degraded_compiles,
+                    degraded_lane=self.degraded_lane)
 
     def _dispatch(self) -> None:
         waves, self._pending = self._pending, []
@@ -794,7 +858,7 @@ class ShuffleStream:
                                    axis=-1))
         t0 = time.perf_counter()
         if self._failed:
-            out = self._degraded_exec(buf, len(waves))  # host, synchronous
+            out = self._degraded_exec(buf, len(waves))
         else:
             out = self._fn(len(waves))(buf)    # async: returns immediately
         self.dispatches += 1

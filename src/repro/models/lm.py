@@ -558,3 +558,17 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, cache_index):
                                   cache_index=ci, mode="decode")
     x = L.rms_norm(x, params["norm_f"])
     return _logits(cfg, params, x), new_cache
+
+
+def poisoned_rows(logits, vocab: int):
+    """Device-side poisoned-output sentinel (DESIGN.md §15).
+
+    ``logits [..., V]`` -> bool ``[...]``: True where a row's next-token
+    logits contain any non-finite value over the real (unpadded) vocab.
+    Rows are independent through every decode op (attention, norms and
+    sampling are all per-row), so a poisoned row never contaminates its
+    batch siblings — the serving wave carries this mask to stop the bad
+    slot exactly at its last clean token while the rest of the wave
+    continues undisturbed.
+    """
+    return ~jnp.all(jnp.isfinite(logits[..., :vocab]), axis=-1)

@@ -43,7 +43,8 @@ from repro.core.shuffle import Transmission
 __all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport",
            "MembershipError", "StragglerPolicy", "Membership",
            "ElasticController", "retarget_engine",
-           "degraded_shuffle_host"]
+           "degraded_shuffle_host", "degraded_dense_plan",
+           "build_degraded_executor"]
 
 
 class MembershipError(RuntimeError):
@@ -576,3 +577,151 @@ def degraded_shuffle_host(program, failed, contribs) -> np.ndarray:
                 out[s_orig, j] = (recv_batch[(s, j, tl, s)]
                                   + recv_rest[(s, j, s)])
     return out
+
+
+def degraded_dense_plan(program, failed):
+    """Dense index-plan of the survivor-set re-lowering (DESIGN.md §15).
+
+    Every logical output row ``(s_orig, j)`` of
+    :func:`degraded_shuffle_host` is ``A + B``: A is ONE element of the
+    flattened contribution tensor (the recv_batch delivery) and B is a
+    TWO-LEVEL ordered fold over further elements — the outer level over
+    "groups" (the s3 sends sharing the row's key, in s3 iteration
+    order; or the owner's stored batches ascending), the inner level a
+    left fold over each group's elements in listed order. This function
+    extracts those indices WITHOUT running anything, preserving the
+    host interpreter's exact combine order, so a device executor
+    gathering through them is BITWISE-identical to the interpreter
+    (fp addition is not associative — flattening the nested folds
+    would break the §11 bit-identity contract).
+
+    Returns ``(a_idx [R], g_idx [R, G, E], g_mask [R, G, E])`` int32 /
+    bool with ``R = K * J`` row-major over ``(s_orig, j)``, indexing
+    the flattened ``[K * J_own * (k-1) * K]`` leading axes of contribs.
+    ``g_mask`` marks real (non-pad) elements; every row has >= 1 group
+    and every real group >= 1 element, with element 0 always real.
+    Indices are value-width independent: one plan serves every stacked
+    wave width ``W * d``.
+    """
+    deg = SCHEDULE_CACHE.degraded(program, set(failed))
+    design, pl = program.design, program.placement
+    q, k, K = program.q, program.k, program.K
+    J = design.J
+    J_own = q ** (k - 2)
+    dead = deg.failed
+
+    def flat(s, a, b, owner):
+        return ((s * J_own + a) * (k - 1) + b) * K + owner
+
+    # (server, job, batch) -> (a, b) slot in the contribs tensor; only
+    # survivors enter, so indexing dead data is a KeyError (a plan bug)
+    pos: dict = {}
+    for s in range(K):
+        if s in dead:
+            continue
+        for a in range(J_own):
+            j = int(program.owned_jobs[s, a])
+            for b in range(k - 1):
+                t = int(program.stored_batches[s, a, b])
+                pos[(s, j, t)] = (a, b)
+
+    recv_src: dict = {}          # (rcv, job, batch, owner) -> flat idx
+    for row in deg.coded_rows:
+        G = program.group_members(int(row))
+        for kp, j, t in program.coded_chunks(int(row)):
+            holder = next(s for s in G if s != kp)
+            a, b = pos[(holder, j, t)]
+            recv_src[(kp, j, t, kp)] = flat(holder, a, b, kp)
+    for _row, sends in deg.uncoded:
+        for holder, rcv, j, t, owner in sends:
+            a, b = pos[(holder, j, t)]
+            recv_src[(rcv, j, t, owner)] = flat(holder, a, b, owner)
+
+    rest_groups: dict = {}       # (rcv, job, owner) -> [group, ...]
+    for snd, rcv, j, owner, batches in deg.s3:
+        grp = [flat(snd, *pos[(snd, j, t)], owner) for t in batches]
+        rest_groups.setdefault((rcv, j, owner), []).append(grp)
+
+    a_idx = np.zeros(K * J, np.int32)
+    per_row: list = []
+    for s_orig in range(K):
+        s = int(deg.migrate[s_orig])
+        migrated = s != s_orig
+        for j in range(J):
+            r = s_orig * J + j
+            if migrated:
+                cls = design.class_of(s_orig)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == cls]
+                tl = pl.batch_of_label(j, l)
+                a_idx[r] = recv_src[(s, j, tl, s_orig)]
+                grps = rest_groups[(s, j, s_orig)]
+            elif design.is_owner(s, j):
+                tmiss = pl.batch_of_label(j, s)
+                a_idx[r] = recv_src[(s, j, tmiss, s)]
+                grps = [[flat(s, *pos[(s, j, t)], s)
+                         for t in range(k) if t != tmiss]]
+            else:
+                cls = design.class_of(s)
+                (l,) = [u for u in design.owners[j]
+                        if design.class_of(u) == cls]
+                tl = pl.batch_of_label(j, l)
+                a_idx[r] = recv_src[(s, j, tl, s)]
+                grps = rest_groups[(s, j, s)]
+            per_row.append(grps)
+
+    Gm = max(len(g) for g in per_row)
+    Em = max(len(e) for g in per_row for e in g)
+    g_idx = np.zeros((K * J, Gm, Em), np.int32)
+    g_mask = np.zeros((K * J, Gm, Em), bool)
+    for r, grps in enumerate(per_row):
+        for gi, grp in enumerate(grps):
+            g_idx[r, gi, :len(grp)] = grp
+            g_mask[r, gi, :len(grp)] = True
+    return a_idx, g_idx, g_mask
+
+
+def build_degraded_executor(program, failed, d: int, dtype):
+    """AOT-compile the dense degraded plan into ONE device executable
+    ``contribs [K, J_own, k-1, K, d] -> out [K, J, d]`` (DESIGN.md
+    §15) — the :class:`~repro.core.collective.ShuffleStream` degraded
+    lane. Compilation happens HERE (``.lower(...).compile()``), never
+    at dispatch: warmed through the EXEC_CACHE, a mid-stream degrade
+    swaps executables with zero retraces, and the recovery data path
+    stays on device instead of falling back to the host interpreter.
+
+    Bitwise contract: the gathers and the two-level masked fold below
+    replay :func:`degraded_shuffle_host`'s adds in its exact order.
+    Masking uses ``where(mask, acc + v, acc)`` — a SELECT around the
+    add, never ``acc + where(mask, v, 0)``, which would rewrite
+    ``-0.0`` rows.
+    """
+    import jax                   # lazy: this module is host-only
+    import jax.numpy as jnp
+
+    a_idx, g_idx, g_mask = degraded_dense_plan(program, failed)
+    q, k, K = program.q, program.k, program.K
+    J_own = q ** (k - 2)
+    J = a_idx.shape[0] // K
+    Gm, Em = g_idx.shape[1], g_idx.shape[2]
+    ai = jnp.asarray(a_idx)
+    gi = jnp.asarray(g_idx)
+    gm = jnp.asarray(g_mask)
+    gvalid = jnp.asarray(g_mask.any(axis=-1))
+
+    def run(contribs):
+        flat = contribs.reshape(-1, contribs.shape[-1])   # [F, d]
+        A = flat[ai]                                      # [R, d]
+        elems = flat[gi]                                  # [R, G, E, d]
+        acc = elems[:, :, 0]
+        for e in range(1, Em):
+            acc = jnp.where(gm[:, :, e, None],
+                            acc + elems[:, :, e], acc)
+        B = acc[:, 0]
+        for g in range(1, Gm):
+            B = jnp.where(gvalid[:, g, None], B + acc[:, g], B)
+        return (A + B).reshape(K, J, -1)
+
+    spec = jax.ShapeDtypeStruct((K, J_own, k - 1, K, d),
+                                jnp.dtype(dtype))
+    return jax.jit(run).lower(spec).compile()

@@ -1,4 +1,5 @@
-"""Deterministic chaos harness for the elastic runtime (DESIGN.md §14).
+"""Deterministic chaos harness for the elastic runtime (DESIGN.md §14)
+and the self-healing serving stack (DESIGN.md §15).
 
 A :class:`FaultPlan` scripts worker churn against wave indices —
 ``Kill(wave, worker)``, ``Rejoin(wave, worker)``, and
@@ -18,6 +19,20 @@ for every churn schedule, and — after
 :meth:`~repro.core.schedule.ScheduleCache.warm_survivors` — recovery
 never pays a lowering.
 
+The SERVING side scripts faults against decode-wave indices:
+``WaveCrash(wave, times)`` raises between the device wave and its
+commit (the supervisor must roll back to the wave-boundary snapshot
+and retry), ``SlotPoison(wave, slot)`` corrupts one live slot's logits
+to NaN on device (the jitted wave's sentinel must quarantine exactly
+that slot), and ``WaveLatency(wave, delay_s)`` inflates the OBSERVED
+wave wall time (drives the timeout-retry path — again no real sleeps).
+:class:`ServeChaosController` also provides the stream's deadline
+clock: a virtual time that advances ``tick_s`` per committed wave, so
+deadline storms replay identically on any machine. The serving
+contract (tests/test_serve_chaos.py): every request terminates with an
+explicit status, survivors are BITWISE identical to the fault-free
+run, and recovery pays zero retraces.
+
 No ``test_`` prefix: this module is the harness, not the suite.
 """
 
@@ -29,10 +44,13 @@ from repro.core.engine import CAMRConfig, CAMREngine
 from repro.runtime.fault import (ElasticController, Membership,
                                  StragglerPolicy)
 from repro.runtime.jobstream import JobSpec, JobStream
+from repro.runtime.serve import ServeStream, WaveCrashError
 
 __all__ = ["Kill", "Rejoin", "Straggle", "FaultPlan", "ChaosController",
            "make_specs", "serial_oracle", "run_plan",
-           "assert_bit_identical"]
+           "assert_bit_identical", "WaveCrash", "SlotPoison",
+           "WaveLatency", "ServeFaultPlan", "ServeChaosController",
+           "run_serve_plan"]
 
 
 @dataclass(frozen=True)
@@ -160,3 +178,115 @@ def assert_bit_identical(oracle, got, context="") -> None:
             for key in a:
                 assert np.array_equal(a[key], b[key]), \
                     (context, w, s, key)
+
+
+# --------------------------------------------------------------------- #
+# serving chaos (DESIGN.md §15): wave crashes, slot poison, latency
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class WaveCrash:
+    """The first ``times`` attempts of committed wave ``wave`` die
+    between the device wave and its commit — the supervisor must roll
+    back to the snapshot and replay bitwise."""
+
+    wave: int
+    times: int = 1
+
+
+@dataclass(frozen=True)
+class SlotPoison:
+    """Live slot ``slot``'s carried logits are corrupted to NaN on
+    device when wave ``wave`` starts; the jitted wave's sentinel — not
+    host code — must quarantine exactly that slot."""
+
+    wave: int
+    slot: int
+
+
+@dataclass(frozen=True)
+class WaveLatency:
+    """The observed wall time of the first ``times`` attempts of wave
+    ``wave`` is inflated by ``delay_s`` — what the timeout supervisor
+    sees, not a real sleep, so timeout-retry plans replay
+    deterministically (bounded ``times`` lets the retry recover)."""
+
+    wave: int
+    delay_s: float = 60.0
+    times: int = 1
+
+
+@dataclass(frozen=True)
+class ServeFaultPlan:
+    """A named, scripted serving fault schedule."""
+
+    events: tuple
+    name: str = ""
+
+
+class ServeChaosController:
+    """Replays a :class:`ServeFaultPlan` through the
+    :class:`~repro.runtime.serve.ServeStream` chaos hooks, and serves
+    as the stream's deterministic deadline clock (virtual time starts
+    at 0 and advances ``tick_s`` per OBSERVED wave attempt — crashed
+    attempts never reach ``on_wave_done`` and do not advance it, so a
+    replayed-after-crash wave sees the same clock)."""
+
+    def __init__(self, plan: ServeFaultPlan, tick_s: float = 1.0):
+        self.plan = plan
+        self.tick_s = tick_s
+        self._t = 0.0
+        self._crashes: dict[int, int] = {}
+        self._lat: dict[int, int] = {}
+        self._poisoned: set = set()
+        self.injected_crashes = 0
+        self.injected_poisons = 0
+        for i, ev in enumerate(plan.events):
+            if isinstance(ev, WaveCrash):
+                self._crashes[i] = ev.times
+            elif isinstance(ev, WaveLatency):
+                self._lat[i] = ev.times
+
+    # the stream's deadline clock (virtual, per-wave ticks)
+    def now(self) -> float:
+        return self._t
+
+    def on_wave_start(self, model, wave, engine) -> None:
+        for i, ev in enumerate(self.plan.events):
+            if (isinstance(ev, SlotPoison) and ev.wave == wave
+                    and i not in self._poisoned
+                    and ev.slot in engine._live):
+                engine.poison_slot(ev.slot)
+                self._poisoned.add(i)
+                self.injected_poisons += 1
+
+    def on_wave_crash(self, model, wave, engine) -> None:
+        for i, ev in enumerate(self.plan.events):
+            if (isinstance(ev, WaveCrash) and ev.wave == wave
+                    and self._crashes.get(i, 0) > 0):
+                self._crashes[i] -= 1
+                self.injected_crashes += 1
+                raise WaveCrashError(
+                    f"chaos: injected crash of wave {wave} "
+                    f"(plan {self.plan.name!r})")
+
+    def on_wave_done(self, model, wave, engine, wall_s: float) -> float:
+        for i, ev in enumerate(self.plan.events):
+            if (isinstance(ev, WaveLatency) and ev.wave == wave
+                    and self._lat.get(i, 0) > 0):
+                self._lat[i] -= 1
+                wall_s = wall_s + ev.delay_s
+        self._t += self.tick_s       # attempt observed: clock ticks
+        return wall_s
+
+
+def run_serve_plan(engine, requests, plan: ServeFaultPlan, *,
+                   tick_s: float = 1.0, wave_len: int = 8,
+                   pipeline: bool = False, **stream_kw):
+    """Run ``requests`` through a ServeStream under ``plan``. Returns
+    ``(results, stream, controller)``. ``pipeline=False`` by default:
+    scripted plans address slots by wave index, so the wave schedule
+    must be single-threaded deterministic."""
+    ctrl = ServeChaosController(plan, tick_s=tick_s)
+    stream = ServeStream(engine, wave_len=wave_len, pipeline=pipeline,
+                         chaos=ctrl, **stream_kw)
+    return stream.run(requests), stream, ctrl

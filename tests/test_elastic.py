@@ -292,6 +292,42 @@ def test_degraded_host_never_reads_dead_rows():
         np.testing.assert_array_equal(out, healthy, err_msg=f"worker {w}")
 
 
+def test_degraded_device_executor_bitwise_vs_host_interpreter():
+    """The compiled dense degraded executor (DESIGN.md §15) replays the
+    host interpreter's exact fold order: bitwise-equal output for EVERY
+    recoverable survivor set, across cluster shapes, with -0.0 values
+    sprinkled in to catch masked-add bit rewrites (the where-select
+    contract)."""
+    from itertools import combinations
+
+    from repro.runtime.fault import (build_degraded_executor,
+                                     degraded_shuffle_host)
+
+    for q, k, d in [(2, 3, 8), (2, 4, 9)]:
+        prog = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d)
+        K, J_own = q * k, q ** (k - 2)
+        rng = np.random.default_rng(11)
+        contribs = rng.standard_normal(
+            (K, J_own, k - 1, K, d)).astype(np.float32)
+        contribs[rng.random(contribs.shape) < 0.05] = -0.0
+        checked = 0
+        for r in (1, 2):
+            for combo in combinations(range(K), r):
+                try:
+                    SCHEDULE_CACHE.degraded(prog, set(combo))
+                except ValueError:
+                    continue
+                failed = frozenset(combo)
+                want = degraded_shuffle_host(prog, failed, contribs)
+                exe = build_degraded_executor(prog, failed, d,
+                                              np.float32)
+                got = np.asarray(exe(contribs))
+                assert (want.view(np.uint32)
+                        == got.view(np.uint32)).all(), (q, k, combo)
+                checked += 1
+        assert checked >= K, (q, k, checked)
+
+
 # --------------------------------------------------------------------- #
 # SPMD stream elasticity (subprocess: needs a K-device mesh)
 # --------------------------------------------------------------------- #
@@ -353,6 +389,63 @@ _RUN_STREAM_CHURN = textwrap.dedent("""
 
 def test_shuffle_stream_degrade_restore_bitwise():
     out = _run_subprocess(_RUN_STREAM_CHURN, ndev=6)
+    assert "OK" in out
+
+
+_RUN_DEGRADED_DEVICE = textwrap.dedent("""
+    import numpy as np
+    from repro.compat import make_mesh
+    from repro.core.collective import (ShuffleStream, make_plan,
+                                       scatter_contributions)
+
+    q, k, d = 2, 3, 8
+    plan = make_plan(q, k, d)
+    mesh = make_mesh((plan.K,), ("camr",))
+    rng = np.random.default_rng(3)
+    contribs = [scatter_contributions(
+        plan, rng.standard_normal((plan.J, k, plan.K, d)).astype(
+            np.float32)) for _ in range(4)]
+
+    # oracle lane: the fault runtime's host interpreter
+    host = ShuffleStream(q, k, d, mesh=mesh, degraded_lane="host")
+    host.degrade({4})
+    want = [np.asarray(o) for o in host.run_waves(contribs)]
+    assert host.stats()["degraded_compiles"] == 0, host.stats()
+
+    # device lane, warmed BEFORE any failure: the degrade itself and
+    # every degraded dispatch must then be completely build-free
+    dev = ShuffleStream(q, k, d, mesh=mesh)   # degraded_lane="device"
+    n = dev.warm_degraded_execs(max_failures=1)
+    assert n == plan.K, n                     # every single-failure set
+    warmed = dev.stats()["degraded_compiles"]
+    assert warmed == plan.K, dev.stats()
+    dev.degrade({4})
+    got = [np.asarray(o) for o in dev.run_waves(contribs)]
+    st = dev.stats()
+    assert st["degraded_compiles"] == warmed, st   # warm hit: 0 builds
+    assert st["compiles"] == 0, st   # healthy lane never even compiled
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)   # device == host, bitwise
+
+    # a SECOND stream of the same shape hits the process-wide
+    # EXEC_CACHE: its own counter stays at zero through a live degrade
+    dev2 = ShuffleStream(q, k, d, mesh=mesh)
+    dev2.degrade({1})
+    got2 = [np.asarray(o) for o in dev2.run_waves(contribs)]
+    assert dev2.stats()["degraded_compiles"] == 0, dev2.stats()
+    host2 = ShuffleStream(q, k, d, mesh=mesh, degraded_lane="host")
+    host2.degrade({1})
+    for w, g in zip(host2.run_waves(contribs), got2):
+        np.testing.assert_array_equal(np.asarray(w), g)
+    print("OK")
+""")
+
+
+def test_shuffle_stream_degraded_device_lane_warm_zero_builds():
+    """Satellite gate (DESIGN.md §15): the degraded SPMD lane runs a
+    pre-compiled on-device executor — warm-hit means ZERO builds at
+    degrade time — and its output is bitwise the host interpreter's."""
+    out = _run_subprocess(_RUN_DEGRADED_DEVICE, ndev=6)
     assert "OK" in out
 
 

@@ -114,8 +114,45 @@ def test_checkpoint_corruption_detected(tmp_path):
     arr = np.load(os.path.join(d, fn))   # raw uint8 buffer
     arr[0] ^= 0xFF
     np.save(os.path.join(d, fn), arr)
-    with pytest.raises(IOError):
+    # the only step is corrupt: resume warns about it, then raises
+    # because nothing intact remains
+    with pytest.raises(IOError), \
+            pytest.warns(RuntimeWarning, match="failed verification"):
         load_checkpoint(str(tmp_path), tree)
+
+
+def test_checkpoint_corrupt_resume_falls_back_to_intact(tmp_path):
+    """Resume (step=None) must skip corrupted steps and land on the
+    newest INTACT one with a warning — a torn write never strands the
+    restart (DESIGN.md §15). An explicit step still raises."""
+    tree = {"a": jnp.arange(4.0)}
+    d1 = save_checkpoint(str(tmp_path), {"a": jnp.full((4,), 1.0)},
+                         step=1)
+    d2 = save_checkpoint(str(tmp_path), {"a": jnp.full((4,), 2.0)},
+                         step=2)
+    d3 = save_checkpoint(str(tmp_path), {"a": jnp.full((4,), 3.0)},
+                         step=3)
+    # the manifest now carries a per-file crc32 alongside the payload
+    # hash
+    import json
+    with open(os.path.join(d1, "manifest.json")) as f:
+        assert all("crc32" in e
+                   for e in json.load(f)["leaves"].values())
+    # two distinct corruptions of the two newest steps: a flipped byte
+    # (crc/hash mismatch) and a missing leaf file (torn write)
+    fn = [f for f in os.listdir(d3) if f.endswith(".npy")][0]
+    raw = np.load(os.path.join(d3, fn))
+    raw[0] ^= 0xFF
+    np.save(os.path.join(d3, fn), raw)
+    os.remove(os.path.join(
+        d2, [f for f in os.listdir(d2) if f.endswith(".npy")][0]))
+    with pytest.warns(RuntimeWarning, match="failed verification"):
+        got, meta = load_checkpoint(str(tmp_path), tree)
+    assert meta["step"] == 1
+    assert float(np.asarray(got["a"])[0]) == 1.0
+    # asking for the corrupt step BY NAME must not silently fall back
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path), tree, step=3)
 
 
 def test_checkpoint_manager_async_retention(tmp_path):
