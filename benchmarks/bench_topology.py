@@ -1,0 +1,91 @@
+"""Two-level topology byte model vs the flat schedule (DESIGN.md §16).
+
+Per config, lowers the two-level overlay and MEASURES per-edge bytes by
+walking the actual send tables (:func:`repro.core.collective
+.camr_edge_bytes`), then gates them against the closed forms:
+
+* measured inter-host bytes — flat AND two-level — must equal the
+  ``camr_edge_loads`` / ``camr_load_hierarchical`` prediction EXACTLY
+  (``load * J * K * B``, ``B = d * itemsize``): the analytic model and
+  the lowered tables are the same object, not an approximation;
+* the two-level schedule must cut inter-host bytes vs flat on every
+  benched config (factor ``hosts/k``, strict because every config here
+  has ``hosts < k``).
+
+Both gates are deterministic table-walks (no timing noise); a miss is
+fatal under ``CAMR_BENCH_STRICT=1`` and a loud warning otherwise,
+matching the repo's gate idiom. CI runs this suite strict in the
+topology-smoke step (.github/workflows/ci.yml).
+"""
+
+import os
+import sys
+import time
+
+from repro.core.collective import camr_edge_bytes, make_plan
+from repro.core.loads import (camr_edge_loads, camr_load_hierarchical,
+                              uncoded_load_hierarchical)
+from repro.core.schedule import Topology
+
+# every config has hosts < k: the dedup factor hosts/k is a strict cut
+CONFIGS = [(2, 4, 2), (3, 4, 2), (2, 6, 2), (2, 6, 3)]
+
+
+def _gate(ok: bool, msg: str) -> None:
+    if ok:
+        return
+    if os.environ.get("CAMR_BENCH_STRICT") == "1":
+        raise AssertionError(msg)
+    print(f"WARNING: {msg} (set CAMR_BENCH_STRICT=1 to make this "
+          "fatal)", file=sys.stderr)
+
+
+def rows(d: int | None = None, alpha: float = 4.0):
+    out = []
+    for q, k, hosts in CONFIGS:
+        dd = 2 * (k - 1) if d is None else d
+        t0 = time.perf_counter()
+        plan = make_plan(q, k, dd, topology=Topology.two_level(hosts,
+                                                               alpha=alpha))
+        eb = camr_edge_bytes(plan)
+        us = (time.perf_counter() - t0) * 1e6
+        J, K, B = plan.J, plan.K, dd * 4
+        for sched in ("flat", "two_level"):
+            intra, inter = camr_edge_loads(q, k, hosts, schedule=sched)
+            for edge, load in (("inter", inter), ("intra", intra)):
+                got = eb[f"{sched}_{edge}_bytes"]
+                want = load * J * K * B
+                _gate(abs(got - want) < 1e-6,
+                      f"q{q}k{k}h{hosts} {sched} {edge}: measured "
+                      f"{got}B != predicted {want}B")
+        _gate(eb["two_level_inter_bytes"] < eb["flat_inter_bytes"],
+              f"q{q}k{k}h{hosts}: two-level inter bytes "
+              f"{eb['two_level_inter_bytes']} not < flat "
+              f"{eb['flat_inter_bytes']}")
+        cut = eb["flat_inter_bytes"] / eb["two_level_inter_bytes"]
+        out.append({
+            "name": f"topology_q{q}_k{k}_h{hosts}",
+            "us_per_call": us,
+            "config": {"q": q, "k": k, "hosts": hosts, "d": dd,
+                       "alpha": alpha},
+            "inter_bytes_flat": eb["flat_inter_bytes"],
+            "inter_bytes_two_level": eb["two_level_inter_bytes"],
+            "intra_bytes_flat": eb["flat_intra_bytes"],
+            "intra_bytes_two_level": eb["two_level_intra_bytes"],
+            "hier_load": camr_load_hierarchical(q, k, hosts, alpha),
+            "uncoded_hier_load": uncoded_load_hierarchical(q, k, hosts,
+                                                           alpha),
+            "derived": (f"K={plan.K} inter {eb['flat_inter_bytes']}B->"
+                        f"{eb['two_level_inter_bytes']}B (x{cut:.2f} cut"
+                        f"=k/hosts) intra {eb['flat_intra_bytes']}B->"
+                        f"{eb['two_level_intra_bytes']}B "
+                        f"L_hier(a={alpha:g})="
+                        f"{camr_load_hierarchical(q, k, hosts, alpha):.3f}"
+                        ),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -13,6 +13,7 @@ Tables:
   collective — TPU p2p byte model, CAMR vs ring psum
   schedule   — ShuffleProgram lowering + batched-vs-looped shuffle time
   jobstream  — pipelined multi-wave stream vs serial engine loop (§9)
+  topology   — two-level vs flat per-edge bytes, analytic gate (§16)
   elastic    — mid-stream churn recovery: warm vs cold re-lowering (§14)
   train      — SPMD vs interpreter gradient sync (training path, §11)
   serve      — continuous-batching engine vs legacy host loop (§13)
@@ -73,6 +74,8 @@ SUITES = {
                                     fromlist=["rows"]).rows(),
     "elastic": lambda: __import__("benchmarks.bench_elastic",
                                   fromlist=["rows"]).rows(),
+    "topology": lambda: __import__("benchmarks.bench_topology",
+                                   fromlist=["rows"]).rows(),
     "train": lambda: __import__("benchmarks.bench_train",
                                 fromlist=["rows"]).rows(),
     "serve": lambda: __import__("benchmarks.bench_serve",

@@ -72,12 +72,14 @@ from jax import lax
 
 from .designs import ResolvableDesign
 from .placement import Placement
-from .schedule import (EXEC_CACHE, SCHEDULE_CACHE, ShuffleProgram,
-                       StageTables, payload_words)
+from .schedule import (EXEC_CACHE, SCHEDULE_CACHE, HostTables,
+                       ShuffleProgram, StageTables, Topology,
+                       _normalize_topology, payload_words)
 
 __all__ = ["CAMRPlan", "make_plan", "camr_shuffle", "scatter_contributions",
            "camr_shuffle_reference", "uncoded_reduce_scatter",
-           "camr_collective_bytes", "expected_collective_calls",
+           "camr_collective_bytes", "camr_edge_bytes",
+           "expected_collective_calls",
            "ShuffleStream", "CODEC_DTYPES", "PACKED_DTYPES",
            "check_codec_dtype"]
 
@@ -134,12 +136,24 @@ class CAMRPlan:
     def packet_len(self) -> int:
         return self.d // (self.k - 1)
 
+    @property
+    def topology(self) -> Topology | None:
+        """The topology the program was lowered for (None == flat)."""
+        return self.program.topology
 
-def make_plan(q: int, k: int, d: int) -> CAMRPlan:
+
+def make_plan(q: int, k: int, d: int,
+              topology: Topology | None = None) -> CAMRPlan:
     """Lower the full SPMD schedule for a (q, k) CAMR cluster.
 
     Served from the structural :data:`~repro.core.schedule.SCHEDULE_CACHE`
     — all shard widths of one (q, k) share the same base lowering.
+
+    ``topology=None`` (or flat) lowers the exact schedules every prior
+    PR lowered; a two-level :class:`Topology` additionally lowers the
+    host-aware relay overlay (DESIGN.md §16) that the executor uses to
+    deduplicate inter-host packet copies. Outputs are bitwise identical
+    either way.
     """
     if k < 3:
         # k = 2 degenerates (single-packet chunks, blocks of size 1);
@@ -147,7 +161,8 @@ def make_plan(q: int, k: int, d: int) -> CAMRPlan:
         raise ValueError("TPU collective path requires k >= 3")
     if d % (k - 1):
         raise ValueError(f"shard width d={d} must be divisible by k-1={k - 1}")
-    program = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d)
+    program = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
+                                     topology=topology)
     return CAMRPlan(q=q, k=k, d=d, program=program)
 
 
@@ -414,6 +429,85 @@ def _stage_coded_batched(axis_name, wire, T: StageTables, me, *,
                          use_kernels=use_kernels)
 
 
+def _stage_coded_two_level(axis_name, wire, T: StageTables,
+                           X: HostTables, me, *, q, k, K, pk, router,
+                           codec, use_kernels):
+    """One coded stage on a two-level topology (DESIGN.md §16).
+
+    Phase A is :func:`_stage_coded_batched`'s round exchange driven by
+    the PRIMARY-masked send tables: the only packet copies that cross a
+    host boundary are the per-host gateway copies; masked slots arrive
+    as zero blocks. Phase B then relays each gateway's copy to the
+    other same-host receivers with intra-host cyclic-shift ppermutes
+    (every hop stays on the fast edge), filling exactly the recv slots
+    phase A zeroed. The reconstructed receive buffer is word-identical
+    to the flat exchange's, so decode — and the shuffle output — stays
+    bitwise equal to the flat schedule and the serial engine oracle.
+    """
+    def dev(tab):
+        return jnp.take(jnp.asarray(tab), me, axis=0)
+
+    R = int(T.R)
+    n = T.n
+    ctx, delta = _encode_stage(wire, T, me, k=k, pk=pk, codec=codec,
+                               use_kernels=use_kernels)
+    # ---- phase A: flat round exchange, primary deliveries only ------- #
+    recv = []
+    for r in range(1, k):
+        if router == "all_to_all":
+            idx = dev(X.a2a_send[r - 1])                      # [K, R]
+            buf = jnp.where((idx >= 0)[:, :, None],
+                            delta[jnp.clip(idx, 0)], 0)       # [K, R, pk]
+            got = lax.all_to_all(buf, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=True)
+            flat = got.reshape(K * R, pk)
+            slot = dev(T.a2a_recv[r - 1])                     # [n]
+        elif router == "ppermute":
+            parts = []
+            for dd in range(q):
+                idx = dev(X.pp_send[r - 1, dd])               # [R]
+                buf = jnp.where((idx >= 0)[:, None],
+                                delta[jnp.clip(idx, 0)], 0)
+                parts.append(lax.ppermute(
+                    buf, axis_name, perm=list(T.pp_perms[r - 1][dd])))
+            flat = jnp.concatenate(parts, axis=0)             # [q*R, pk]
+            slot = dev(T.pp_recv[r - 1])
+        else:
+            raise ValueError(f"unknown router {router!r}")
+        recv.append(flat[slot])                               # [n, pk]
+    recv_a = jnp.stack(recv, axis=1)                          # [n, k-1, pk]
+
+    # ---- phase B: intra-host gateway relay --------------------------- #
+    if int(X.Rb):
+        Rb = int(X.Rb)
+        src_a = recv_a.reshape(n * (k - 1), pk)   # gateway slots only:
+        # a relay source is always a PRIMARY (phase-A-filled) slot, so
+        # gathering from the phase-A buffer can never read a slot that
+        # phase B itself fills
+        rounds = []
+        for r in range(1, k):
+            live = X.b_live[r - 1]
+            if not live:
+                rounds.append(recv_a[:, r - 1])
+                continue
+            parts = []
+            for di in live:
+                idx = dev(X.b_send[r - 1, di])                # [Rb]
+                buf = jnp.where((idx >= 0)[:, None],
+                                src_a[jnp.clip(idx, 0)], 0)
+                parts.append(lax.ppermute(
+                    buf, axis_name, perm=list(X.b_perms[di])))
+            relay = jnp.concatenate(parts, axis=0)   # [len(live)*Rb, pk]
+            slot = dev(X.b_recv[r - 1])                       # [n]
+            mask = dev(X.b_mask[r - 1])                       # [n]
+            rounds.append(jnp.where(mask[:, None], relay[slot],
+                                    recv_a[:, r - 1]))
+        recv_a = jnp.stack(rounds, axis=1)
+
+    return _decode_stage(recv_a, ctx, T, me, k=k, pk=pk, codec=codec,
+                         use_kernels=use_kernels)
+
+
 def _stage_coded_looped(axis_name, wire, T: StageTables, rounds_list, me, *,
                         k, pk, codec, use_kernels):
     """Legacy exchange — one ppermute per group per round (benchmark
@@ -471,6 +565,11 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         raise ValueError(f"unknown mode {mode!r}")
     if codec not in ("fused", "multipass"):
         raise ValueError(f"unknown codec {codec!r}")
+    two_level = prog.topology is not None
+    if two_level and mode != "batched":
+        raise ValueError("two-level topology requires mode='batched' "
+                         "(the looped legacy router has no host-aware "
+                         "relay lane)")
     use_kernels = _resolve_kernels(use_kernels)
     me = lax.axis_index(axis_name)
     # wire lane (DESIGN.md §12): wp u32 words per shard — d for 4-byte
@@ -488,7 +587,12 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     stage_vals = {}
     for stage in (1, 2):
         T = prog.stage_tables(stage)
-        if mode == "batched":
+        if mode == "batched" and two_level:
+            decoded = _stage_coded_two_level(
+                axis_name, wire, T, prog.host_tables(stage), me, q=q,
+                k=k, K=K, pk=pk, router=router, codec=codec,
+                use_kernels=use_kernels)
+        elif mode == "batched":
             decoded = _stage_coded_batched(
                 axis_name, wire, T, me, q=q, k=k, K=K, pk=pk,
                 router=router, codec=codec, use_kernels=use_kernels)
@@ -543,10 +647,16 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
 def expected_collective_calls(plan: CAMRPlan, mode: str = "batched",
                               router: str = "all_to_all") -> dict[str, int]:
     """Collectives per shuffle — what each mode traces (tested against
-    the jaxpr in tests/test_collective.py)."""
+    the jaxpr in tests/test_collective.py). On a two-level topology the
+    phase-B relay adds one intra-host ppermute per live (round, shift)
+    lane of each coded stage."""
     q, k = plan.q, plan.k
     if mode == "batched":
         s12 = 2 * (k - 1) if router == "all_to_all" else 2 * (k - 1) * q
+        if plan.topology is not None:
+            s12 += sum(len(live) for X in (plan.program.hx1,
+                                           plan.program.hx2)
+                       for live in X.b_live)
     else:
         s12 = (plan.J + plan.program.n_s2) * (k - 1)
     return dict(stage12=s12, stage3=q - 1, total=s12 + q - 1)
@@ -631,7 +741,8 @@ class ShuffleStream:
                  axis_name: str = "camr", depth: int = 2,
                  wave_batch: int = 1, mode: str = "batched",
                  router: str = "all_to_all", codec: str = "fused",
-                 use_kernels=None, degraded_lane: str = "device"):
+                 use_kernels=None, degraded_lane: str = "device",
+                 topology: Topology | None = None):
         if k < 3:
             raise ValueError("TPU collective path requires k >= 3")
         if d % (k - 1):
@@ -659,6 +770,12 @@ class ShuffleStream:
         if degraded_lane not in ("device", "host"):
             raise ValueError(f"unknown degraded_lane {degraded_lane!r}")
         self.degraded_lane = degraded_lane
+        self.topology = _normalize_topology(topology)
+        if self.topology is not None:
+            self.topology.check(q, k)
+            if mode != "batched":
+                raise ValueError("two-level topology requires "
+                                 "mode='batched'")
         self._jitted: dict[int, object] = {}   # W -> compiled executor
         self._pending: list = []               # waves awaiting dispatch
         self._in_flight: deque = deque()       # (out, W, dispatch time)
@@ -677,7 +794,8 @@ class ShuffleStream:
 
             from repro.compat import shard_map
             prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                          d=W * self.d)
+                                          d=W * self.d,
+                                          topology=self.topology)
             plan = CAMRPlan(q=self.q, k=self.k, d=W * self.d,
                             program=prog)
 
@@ -720,7 +838,8 @@ class ShuffleStream:
         if not failed:
             self.restore()
             return
-        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K, d=self.d)
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                      d=self.d, topology=self.topology)
         SCHEDULE_CACHE.degraded(prog, failed)   # validate + warm
         if failed != self._failed:
             self._failed = failed
@@ -741,13 +860,15 @@ class ShuffleStream:
         :meth:`warm_degraded_execs` call before any failure — makes a
         mid-stream degrade completely build-free)."""
         failed = self._failed if failed is None else failed
+        topo = None if self.topology is None else self.topology.key()
         key = ("spmd_degraded", self.q, self.k, self.K, W * self.d,
-               str(jnp.dtype(dtype)), tuple(sorted(failed)))
+               str(jnp.dtype(dtype)), tuple(sorted(failed)), topo)
 
         def build():
             from repro.runtime.fault import build_degraded_executor
             prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                          d=W * self.d)
+                                          d=W * self.d,
+                                          topology=self.topology)
             self.degraded_compiles += 1
             return build_degraded_executor(prog, failed, W * self.d,
                                            dtype)
@@ -766,7 +887,7 @@ class ShuffleStream:
         resident."""
         from itertools import combinations
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                      d=self.d)
+                                      d=self.d, topology=self.topology)
         SCHEDULE_CACHE.warm_survivors(prog, max_failures=max_failures)
         warmed = 0
         for r in range(1, max_failures + 1):
@@ -796,7 +917,8 @@ class ShuffleStream:
             return self._degraded_fn(W, dtype)(jnp.asarray(buf))
         from repro.runtime.fault import degraded_shuffle_host
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                      d=W * self.d)
+                                      d=W * self.d,
+                                      topology=self.topology)
         return degraded_shuffle_host(prog, self._failed,
                                      np.asarray(buf))
 
@@ -847,7 +969,9 @@ class ShuffleStream:
                     widths=sorted(self._jitted), swaps=self.swaps,
                     failed=tuple(sorted(self._failed)),
                     degraded_compiles=self.degraded_compiles,
-                    degraded_lane=self.degraded_lane)
+                    degraded_lane=self.degraded_lane,
+                    topology=(None if self.topology is None
+                              else self.topology.key()))
 
     def _dispatch(self) -> None:
         waves, self._pending = self._pending, []
@@ -917,3 +1041,54 @@ def camr_collective_bytes(plan: CAMRPlan, itemsize: int = 4,
     ring = 2 * (K - 1) * J * K * d * itemsize
     return dict(stage1=s1, stage2=s2, stage3=s3,
                 camr_total=s1 + s2 + s3, psum_ring_total=ring)
+
+
+def camr_edge_bytes(plan: CAMRPlan, itemsize: int = 4,
+                    dtype=None) -> dict[str, int]:
+    """Per-edge bytes of the flat vs two-level schedules, MEASURED from
+    the lowered send tables (DESIGN.md §16) — not the closed form.
+
+    Walks the actual routing tables the executor drives the wire with:
+    every kept ``a2a_send`` entry is one packet delivery, classified by
+    the host blocks of its sender and receiver under the plan's
+    two-level topology; phase-B relay hops (``b_send``) are intra-host
+    by construction. Stage-3 unicasts are intra-class and parallel
+    classes sit inside host blocks (``hosts | k``), so stage 3 never
+    crosses under either schedule. ``benchmarks/bench_topology.py``
+    gates these measured counts against the analytic
+    :func:`repro.core.loads.camr_load_hierarchical` prediction.
+
+    Requires a plan lowered with a two-level topology (the flat plan
+    has no host structure to classify against).
+    """
+    prog = plan.program
+    topo = prog.topology
+    if topo is None:
+        raise ValueError("camr_edge_bytes needs a plan lowered with a "
+                         "two-level topology (make_plan(..., topology="
+                         "Topology.two_level(hosts)))")
+    if dtype is not None:
+        check_codec_dtype(dtype, "camr_edge_bytes")
+        itemsize = jnp.dtype(dtype).itemsize
+    k, q, K, d, J_own = plan.k, plan.q, plan.K, plan.d, plan.J_own
+    pk_b = (payload_words(d, itemsize, k) // (k - 1)) * 4
+    host = np.arange(K) // topo.devices_per_host(K)
+    cross = host[:, None] != host[None, :]                  # [K, K]
+    flat = dict(inter=0, intra=0)
+    two = dict(inter=0, intra=0)
+    for stage in (1, 2):
+        T = prog.stage_tables(stage)
+        X = prog.host_tables(stage)
+        for tab, acc in ((T.a2a_send, flat), (X.a2a_send, two)):
+            kept = (tab >= 0).sum(axis=3).sum(axis=0)       # [K, K]
+            acc["inter"] += int(kept[cross].sum())
+            acc["intra"] += int(kept[~cross].sum())
+        two["intra"] += int((X.b_send >= 0).sum())          # relay hops
+    s3_b = (q - 1) * J_own * d * itemsize * K               # intra-host
+    return dict(
+        hosts=topo.hosts, packet_bytes=pk_b,
+        flat_inter_bytes=flat["inter"] * pk_b,
+        flat_intra_bytes=flat["intra"] * pk_b + s3_b,
+        two_level_inter_bytes=two["inter"] * pk_b,
+        two_level_intra_bytes=two["intra"] * pk_b + s3_b,
+        s3_inter_bytes=0)

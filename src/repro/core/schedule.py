@@ -62,6 +62,8 @@ from .designs import ResolvableDesign, make_design
 from .placement import Placement, make_placement
 
 __all__ = [
+    "Topology",
+    "HostTables",
     "StageTables",
     "ShuffleProgram",
     "lower_program",
@@ -75,6 +77,85 @@ __all__ = [
     "pack_payload",
     "unpack_payload",
 ]
+
+
+# --------------------------------------------------------------------- #
+# interconnect topology (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Topology:
+    """Physical interconnect model the lowering targets.
+
+    ``hosts``  number of hosts; devices are class-major blocks of
+               ``dph = K / hosts`` consecutive device ids per host, so
+               ``hosts | k`` aligns whole parallel classes to hosts
+               (Konstantinidis & Ramamoorthy: resolvable parallel
+               classes mapped onto physical groupings).
+    ``alpha``  inter-host cost per byte relative to intra-host (>= 1
+               in practice; ``alpha = 1`` collapses the cost model to
+               the flat per-link one).
+
+    ``hosts <= 1`` IS the flat topology — the identity case: lowering,
+    cache keys and executors treat it exactly as ``topology=None``, so
+    every existing flat schedule stays bitwise identical.
+    """
+
+    hosts: int = 1
+    alpha: float = 1.0
+
+    def __post_init__(self):
+        if self.hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {self.hosts}")
+        if not self.alpha > 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+
+    @classmethod
+    def flat(cls) -> "Topology":
+        return cls(hosts=1, alpha=1.0)
+
+    @classmethod
+    def two_level(cls, hosts: int, alpha: float = 4.0) -> "Topology":
+        if hosts < 2:
+            raise ValueError("two-level topology needs hosts >= 2 "
+                             f"(got {hosts}); use Topology.flat()")
+        return cls(hosts=hosts, alpha=float(alpha))
+
+    @property
+    def is_flat(self) -> bool:
+        return self.hosts <= 1
+
+    def check(self, q: int, k: int) -> None:
+        """Validate against a CAMR configuration (K = q*k devices)."""
+        if self.is_flat:
+            return
+        if k % self.hosts:
+            raise ValueError(
+                f"two-level lowering needs hosts | k so parallel "
+                f"classes align to host blocks (hosts={self.hosts}, "
+                f"k={k})")
+
+    def devices_per_host(self, K: int) -> int:
+        if K % self.hosts:
+            raise ValueError(f"hosts={self.hosts} must divide K={K}")
+        return K // self.hosts
+
+    def host_of(self, s: int, K: int) -> int:
+        """Host of device ``s`` under the class-major block layout."""
+        return int(s) // self.devices_per_host(K)
+
+    def key(self):
+        """Hashable cache-key contribution; flat collapses to None so
+        existing flat entries/keys are untouched."""
+        if self.is_flat:
+            return None
+        return (self.hosts, float(self.alpha))
+
+
+def _normalize_topology(topology) -> "Topology | None":
+    """Canonical form for keys and lowering: flat collapses to None."""
+    if topology is None or topology.is_flat:
+        return None
+    return topology
 
 
 # --------------------------------------------------------------------- #
@@ -201,6 +282,147 @@ class StageTables:
 
 
 # --------------------------------------------------------------------- #
+# two-level host-aware relay tables (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True, eq=False)
+class HostTables:
+    """Two-level relay overlay for one coded stage.
+
+    The flat schedule delivers each coded packet Δ[g, u] (group row
+    ``g``, sender ``u``) to its ``k-1`` receivers directly, one per
+    broadcast round — so with class-major host blocks, the SAME packet
+    crosses the slow inter-host edge once per off-host receiver
+    (``k - k/hosts`` times). The two-level schedule deduplicates those
+    crossings:
+
+    * **Phase A** is the flat per-round exchange with every delivery
+      that is not the FIRST copy of its packet to reach a host masked
+      out of the send tables (``-1`` -> zero block / dead lane). The
+      first receiver in round order on each remote host is that host's
+      *gateway* for the packet; same-host deliveries are never masked.
+    * **Phase B** relays the masked copies over the fast edge: for
+      round ``r`` and intra-host shift ``delta``, a single ppermute
+      moves, from each gateway, the packet it received in its own
+      (strictly earlier) primary round ``r0`` to the non-gateway
+      receiver — filling exactly the recv slot the flat exchange would
+      have filled. After A+B the receive buffer is WORD-IDENTICAL to
+      the flat one, so decode and outputs stay bitwise equal.
+
+    Packet counts: per (group row, sender) the flat schedule crosses
+    hosts ``k - c`` times (``c = k/hosts`` classes per host) and the
+    two-level one ``hosts - 1`` times — a strict cut whenever
+    ``hosts < k``. Stage-3 unicasts are intra-class and classes sit
+    inside host blocks, so stage 3 never crosses under either schedule.
+    """
+
+    hosts: int
+    dph: int                      # devices per host (= (k/hosts) * q)
+    a2a_send: np.ndarray          # [k-1, K, K, R]   primary-masked
+    pp_send: np.ndarray           # [k-1, q, K, R]   primary-masked
+    b_deltas: tuple               # intra-host shifts with relay traffic
+    b_send: np.ndarray            # [k-1, nd, K, Rb] flat recv rows
+    #                               (entry = li*(k-1) + (r0-1); -1 pad)
+    b_recv: np.ndarray            # [k-1, K, n] slot into the relay buf
+    b_mask: np.ndarray            # [k-1, K, n] round-r slot phase-B fed
+    b_perms: tuple                # [nd][K] (src, dst) intra-host cyclic
+    b_live: tuple                 # [k-1] delta indices with traffic that
+    #                               round (round 1 is always empty: a
+    #                               gateway needs a strictly earlier
+    #                               round, so no relay can exist yet)
+    Rb: int                       # relay rows per (round, shift, sender)
+    # modeled per-edge delivery counts (packets; DESIGN.md §16)
+    flat_inter: int               # cross-host deliveries, flat schedule
+    two_level_inter: int          # cross-host gateway copies (phase A)
+    relay_intra: int              # phase-B intra-host relay hops
+    intra: int                    # same-host phase-A deliveries
+
+
+def _lower_host_tables(T: StageTables, rows, groups, q, k, K,
+                       hosts) -> HostTables:
+    """Build the two-level overlay of one coded stage (see
+    :class:`HostTables`). Pure numpy at lowering time, like
+    :func:`_lower_stage`."""
+    dph = K // hosts
+    c = k // hosts                      # classes per host
+    n = len(rows)
+    a2a_send = T.a2a_send.copy()
+    pp_send = T.pp_send.copy()
+    b_mask = np.zeros((k - 1, K, n), dtype=bool)
+    moves = {}                          # (r, delta, gateway) -> entries
+    flat_inter = two_inter = relay = intra = 0
+
+    for li in range(n):
+        g = rows[li]
+        G = [int(x) for x in groups[g]]
+        for pm, m in enumerate(G):
+            hm = m // dph
+            seen = {}                   # remote host -> (r0, gateway)
+            for r in range(1, k):
+                w = G[(pm + r) % k]
+                hw = w // dph
+                if hw == hm:
+                    intra += 1
+                    continue            # same-host: always primary
+                flat_inter += 1
+                if hw not in seen:
+                    seen[hw] = (r, w)   # first copy -> gateway, keep
+                    two_inter += 1
+                    continue
+                r0, gw = seen[hw]
+                relay += 1
+                # demote (li, r, m -> w) from phase A ...
+                sl = a2a_send[r - 1, m, w]
+                sl[int(np.flatnonzero(sl == li)[0])] = -1
+                dpp = ((w % q) - (m % q)) % q
+                sl = pp_send[r - 1, dpp, m]
+                sl[int(np.flatnonzero(sl == li)[0])] = -1
+                # ... and relay it intra-host from the gateway
+                b_mask[r - 1, w, li] = True
+                delta = (w - gw) % dph
+                moves.setdefault((r, delta, gw), []).append((li, r0, w))
+
+    # uniform-count sanity: one member per class, c classes per host
+    assert flat_inter == n * k * (k - c)
+    assert two_inter == n * k * (hosts - 1)
+    assert relay == flat_inter - two_inter
+    assert intra == n * k * (c - 1)
+
+    deltas = sorted({delta for (_, delta, _) in moves})
+    dmap = {delta: i for i, delta in enumerate(deltas)}
+    nd = len(deltas)
+    Rb = max((len(v) for v in moves.values()), default=0)
+    b_send = np.full((k - 1, max(nd, 1), K, max(Rb, 1)), -1,
+                     dtype=np.int32)
+    b_recv = np.zeros((k - 1, K, n), dtype=np.int32)
+    # per-round live shifts: the executor issues one relay ppermute per
+    # (round, shift) WITH traffic and concatenates them in b_live order,
+    # so receive slots index the concatenated live lanes only
+    b_live = [sorted({dmap[delta] for (rr, delta, _) in moves
+                      if rr == r}) for r in range(1, k)]
+    for (r, delta, gw), entries in sorted(moves.items()):
+        lane = b_live[r - 1].index(dmap[delta])
+        for idx, (li, r0, w) in enumerate(sorted(entries)):
+            b_send[r - 1, dmap[delta], gw, idx] = li * (k - 1) + (r0 - 1)
+            b_recv[r - 1, w, li] = lane * Rb + idx
+    b_perms = []
+    for delta in deltas:
+        pairs = []
+        for h in range(hosts):
+            for a in range(dph):
+                pairs.append((h * dph + a, h * dph + (a + delta) % dph))
+        b_perms.append(tuple(pairs))
+
+    return HostTables(
+        hosts=hosts, dph=dph,
+        a2a_send=a2a_send, pp_send=pp_send,
+        b_deltas=tuple(deltas), b_send=b_send, b_recv=b_recv,
+        b_mask=b_mask, b_perms=tuple(b_perms),
+        b_live=tuple(tuple(x) for x in b_live), Rb=Rb,
+        flat_inter=flat_inter, two_level_inter=two_inter,
+        relay_intra=relay, intra=intra)
+
+
+# --------------------------------------------------------------------- #
 # the program
 # --------------------------------------------------------------------- #
 @dataclass(frozen=True, eq=False)
@@ -246,6 +468,11 @@ class ShuffleProgram:
     s2: StageTables | None = field(repr=False, default=None)
     d: int | None = None                         # SPMD shard width
 
+    # two-level topology overlay (None == flat, the identity case)
+    topology: Topology | None = None
+    hx1: HostTables | None = field(repr=False, default=None)
+    hx2: HostTables | None = field(repr=False, default=None)
+
     # ------------------------------------------------------------------ #
     @property
     def K(self) -> int:
@@ -284,6 +511,13 @@ class ShuffleProgram:
             raise ValueError("program lowered without device tables")
         return t
 
+    def host_tables(self, stage: int) -> HostTables:
+        t = self.hx1 if stage == 1 else self.hx2
+        if t is None:
+            raise ValueError("program lowered without a two-level "
+                             "topology")
+        return t
+
     def stage_rows(self, stage: int) -> np.ndarray:
         return self.s1_rows if stage == 1 else self.s2_rows
 
@@ -319,12 +553,20 @@ class ShuffleProgram:
 #                         placements and must not pin every program forever
 def lower_program(placement: Placement, Q: int | None = None,
                   d: int | None = None, *,
-                  device_tables: bool = True) -> ShuffleProgram:
+                  device_tables: bool = True,
+                  topology: Topology | None = None) -> ShuffleProgram:
     """Lower ``(Placement, Q, d)`` into a :class:`ShuffleProgram`.
 
     ``d`` (SPMD function-shard width, elements) is only required for the
     collective executor; the engine interprets the schedule tables alone
     (``device_tables=False`` skips the [K, n, ...] SPMD tables).
+
+    ``topology`` selects the transport lowering: ``None`` / flat emits
+    exactly the schedules every prior PR emitted (the identity case); a
+    two-level topology additionally lowers the host-aware relay overlay
+    (:class:`HostTables`) that deduplicates inter-host packet copies.
+    The VALUES computed are identical either way — topology only
+    changes which edge each packet rides.
     """
     design = placement.design
     q, k, K, J = design.q, design.k, design.K, design.J
@@ -334,6 +576,9 @@ def lower_program(placement: Placement, Q: int | None = None,
     if d is not None and d % (k - 1):
         raise ValueError(f"shard width d={d} must be divisible by "
                          f"k-1={k - 1}")
+    topology = _normalize_topology(topology)
+    if topology is not None:
+        topology.check(q, k)
 
     n_groups = q ** k
     group_vals = np.zeros((n_groups, k), dtype=np.int32)
@@ -452,7 +697,7 @@ def lower_program(placement: Placement, Q: int | None = None,
         s3_job=s3_job, s3_recv=s3_recv, s3_send=s3_send,
         s3_batches=s3_batches, s3_perms=tuple(s3_perms),
         is_own=is_own, own_slot=own_slot, s2_ord=s2_ord, s3_off=s3_off,
-        d=d,
+        d=d, topology=topology,
     )
     if not device_tables:
         return ShuffleProgram(**prog)
@@ -461,7 +706,13 @@ def lower_program(placement: Placement, Q: int | None = None,
                       group_vals, q, k, K, owned_index, stored_index)
     s2 = _lower_stage(2, s2_rows, groups, chunk_job, chunk_batch,
                       group_vals, q, k, K, owned_index, stored_index)
-    return ShuffleProgram(s1=s1, s2=s2, **prog)
+    hx1 = hx2 = None
+    if topology is not None:
+        hx1 = _lower_host_tables(s1, s1_rows, groups, q, k, K,
+                                 topology.hosts)
+        hx2 = _lower_host_tables(s2, s2_rows, groups, q, k, K,
+                                 topology.hosts)
+    return ShuffleProgram(s1=s1, s2=s2, hx1=hx1, hx2=hx2, **prog)
 
 
 def _lower_stage(stage, rows, groups, chunk_job, chunk_batch, group_vals,
@@ -711,10 +962,15 @@ def _normalize_label_perm(label_perm, k):
 def _program_key(program: ShuffleProgram) -> tuple:
     """Structural identity of a lowered program — same tuple, same
     tables. ``d`` is deliberately absent: no table depends on it, so
-    width variants of one configuration share degraded re-lowerings."""
+    width variants of one configuration share degraded re-lowerings.
+    The topology (with its cost parameters) IS present: flat and
+    two-level lowerings of the same ``(q, k, gamma, Q)`` must never
+    alias (flat collapses to ``None``, keeping every pre-topology key
+    byte-identical)."""
+    topo = None if program.topology is None else program.topology.key()
     return (program.q, program.k, program.placement.gamma,
             _normalize_label_perm(program.placement.label_perm, program.k),
-            program.Q, program.s1 is not None)
+            program.Q, program.s1 is not None, topo)
 
 
 class ScheduleCache:
@@ -727,8 +983,10 @@ class ScheduleCache:
     full lowering again. This cache keys structurally instead
     (DESIGN.md §9):
 
-    * programs by ``(q, k, gamma, label_perm, Q, device_tables)`` — the
-      survivor set of a healthy cluster is implicit;
+    * programs by ``(q, k, gamma, label_perm, Q, device_tables,
+      topology)`` — the survivor set of a healthy cluster is implicit,
+      and the flat topology normalizes to ``None`` so flat and
+      two-level lowerings of one configuration never alias;
     * degraded programs additionally by ``frozenset(failed)``, i.e. one
       entry per *survivor set*, so fault re-lowering is paid once per
       (configuration, failure pattern) instead of once per wave.
@@ -786,15 +1044,24 @@ class ScheduleCache:
     # -- lookups -------------------------------------------------------- #
     def program(self, q: int, k: int, *, gamma: int = 1,
                 Q: int | None = None, d: int | None = None,
-                label_perm=None, device_tables: bool = True
-                ) -> ShuffleProgram:
-        """The lowered program of one configuration (lowering on miss)."""
+                label_perm=None, device_tables: bool = True,
+                topology: Topology | None = None) -> ShuffleProgram:
+        """The lowered program of one configuration (lowering on miss).
+
+        ``topology`` is part of the structural key (flat normalizes to
+        ``None``, so flat lookups hit exactly the pre-topology
+        entries); flat and two-level lowerings of the same
+        ``(q, k, gamma, Q)`` occupy distinct entries and never
+        cross-hit."""
         label_perm = _normalize_label_perm(label_perm, k)
         Q = q * k if Q is None else Q   # lower_program's own default
         if d is not None and d % (k - 1):
             raise ValueError(f"shard width d={d} must be divisible by "
                              f"k-1={k - 1}")
-        base_key = (q, k, gamma, label_perm, Q, device_tables, None)
+        topology = _normalize_topology(topology)
+        topo_key = None if topology is None else topology.key()
+        base_key = (q, k, gamma, label_perm, Q, device_tables, topo_key,
+                    None)
         with self._lock:
             base = self._get(self._programs, base_key)
             if base is None:
@@ -805,7 +1072,8 @@ class ScheduleCache:
                 # through it would pin every lowering a second time,
                 # surviving this cache's eviction/clear()
                 base = lower_program.__wrapped__(
-                    pl, Q=Q, d=None, device_tables=device_tables)
+                    pl, Q=Q, d=None, device_tables=device_tables,
+                    topology=topology)
                 self._put(self._programs, base_key, base)
             if d is None:
                 return base

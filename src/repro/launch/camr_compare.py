@@ -43,16 +43,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
 from repro.core.collective import (CAMRPlan, ShuffleStream,
-                                   camr_collective_bytes, camr_shuffle,
-                                   camr_shuffle_reference, make_plan,
-                                   scatter_contributions,
+                                   camr_collective_bytes, camr_edge_bytes,
+                                   camr_shuffle, camr_shuffle_reference,
+                                   make_plan, scatter_contributions,
                                    uncoded_reduce_scatter)
+from repro.core.loads import (camr_edge_loads, camr_load_hierarchical,
+                              uncoded_load_hierarchical)
+from repro.core.schedule import Topology
 from repro.launch.hlo_stats import collective_stats
 
 
-def lower_schedules(q: int, k: int, d: int,
-                    codec: str = "fused") -> dict:
-    plan = make_plan(q, k, d)
+def lower_schedules(q: int, k: int, d: int, codec: str = "fused",
+                    topology: Topology | None = None) -> dict:
+    plan = make_plan(q, k, d, topology=topology)
     K, J, J_own = plan.K, plan.J, plan.J_own
     mesh = make_mesh((K,), ("camr",))
     contribs = jax.ShapeDtypeStruct((K, J_own, k - 1, K, d), jnp.float32)
@@ -92,6 +95,21 @@ def lower_schedules(q: int, k: int, d: int,
     out["allreduce_wire"], out["allreduce_ops"] = _wire(ar_fn)
 
     out["analytic"] = camr_collective_bytes(plan)
+    if plan.topology is not None:
+        # per-edge split on the two-level topology (DESIGN.md §16):
+        # measured from the lowered send tables + the closed forms
+        topo = plan.topology
+        out["topology"] = {"hosts": topo.hosts, "alpha": topo.alpha}
+        out["edge_bytes"] = camr_edge_bytes(plan)
+        out["edge_loads"] = {
+            sched: dict(zip(("intra", "inter"),
+                            camr_edge_loads(q, k, topo.hosts,
+                                            schedule=sched)))
+            for sched in ("flat", "two_level")}
+        out["hier_load"] = camr_load_hierarchical(q, k, topo.hosts,
+                                                  topo.alpha)
+        out["uncoded_hier_load"] = uncoded_load_hierarchical(
+            q, k, topo.hosts, topo.alpha)
     return out
 
 
@@ -191,17 +209,49 @@ def main():
                     help="XOR codec lane (DESIGN.md §10): fused "
                          "single-pass gather kernels vs the multipass "
                          "oracle")
+    ap.add_argument("--topology", choices=("flat", "two-level"),
+                    default="flat",
+                    help="lowering topology (DESIGN.md §16): two-level "
+                         "adds the host-aware gateway/relay schedule "
+                         "and per-edge load columns")
+    ap.add_argument("--hosts", type=int, default=2, metavar="N",
+                    help="with --topology two-level: host count "
+                         "(must divide k; default 2)")
+    ap.add_argument("--alpha", type=float, default=4.0, metavar="X",
+                    help="modeled inter-host cost per byte relative to "
+                         "intra-host (default 4.0)")
     args = ap.parse_args()
     if args.kill_at is not None and not args.stream:
         ap.error("--kill-at needs --stream W (churn replays the "
                  "streamed waves)")
-    res = lower_schedules(args.q, args.k, args.d, codec=args.codec)
+    topology = None
+    if args.topology == "two-level":
+        topology = Topology.two_level(args.hosts, alpha=args.alpha)
+        try:
+            topology.check(args.q, args.k)
+        except ValueError as e:
+            ap.error(str(e))
+    res = lower_schedules(args.q, args.k, args.d, codec=args.codec,
+                          topology=topology)
     print(json.dumps(res, indent=1, default=str))
     w = {m: res[f"{m}_wire"] for m in ("camr", "uncoded", "allreduce")}
     base = w["allreduce"]
     for m, b in w.items():
         print(f"{m:10s} wire={b / 2**20:9.2f} MiB  "
               f"({b / base:6.3f}x of allreduce)")
+    if topology is not None:
+        eb, el = res["edge_bytes"], res["edge_loads"]
+        print(f"edges      hosts={topology.hosts} alpha={topology.alpha:g}"
+              f"  L_hier={res['hier_load']:.3f}"
+              f"  (uncoded {res['uncoded_hier_load']:.3f})")
+        for sched in ("flat", "two_level"):
+            print(f"  {sched:9s} inter={eb[f'{sched}_inter_bytes']:>12,}B"
+                  f" (L={el[sched]['inter']:.3f})"
+                  f"  intra={eb[f'{sched}_intra_bytes']:>12,}B"
+                  f" (L={el[sched]['intra']:.3f})")
+        cut = (eb["flat_inter_bytes"] / eb["two_level_inter_bytes"]
+               if eb["two_level_inter_bytes"] else float("inf"))
+        print(f"  inter-host cut x{cut:.2f} (= k/hosts)")
     if args.stream:
         s = measure_stream(args.q, args.k, args.d, args.stream,
                            wave_batch=args.wave_batch, codec=args.codec,

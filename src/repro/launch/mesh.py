@@ -3,6 +3,14 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state; the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before calling.
+
+Multi-host (DESIGN.md §16): :func:`init_distributed` brings up
+``jax.distributed`` (gloo CPU collectives when running multi-process on
+CPU), :func:`make_camr_mesh` builds the 1-D CAMR device axis over the
+GLOBAL device list in the class-major host-block order the two-level
+lowering assumes (host of device ``s`` = ``s // (K/hosts)``), and
+:func:`detect_topology` derives a :class:`~repro.core.schedule.Topology`
+from the process layout.
 """
 
 from __future__ import annotations
@@ -10,8 +18,10 @@ from __future__ import annotations
 import jax
 
 from repro.compat import make_mesh
+from repro.core.schedule import Topology
 
-__all__ = ["make_production_mesh", "data_axes", "mesh_devices"]
+__all__ = ["make_production_mesh", "data_axes", "mesh_devices",
+           "init_distributed", "make_camr_mesh", "detect_topology"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -31,3 +41,72 @@ def data_axes(mesh) -> tuple[str, ...]:
 
 def mesh_devices(mesh) -> int:
     return mesh.devices.size
+
+
+# --------------------------------------------------------------------- #
+# multi-host execution (DESIGN.md §16)
+# --------------------------------------------------------------------- #
+def init_distributed(*, coordinator: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> bool:
+    """Bring up ``jax.distributed`` for multi-process execution.
+
+    On a CPU backend, multi-process collectives need a cross-host
+    implementation — request gloo before initialize (a no-op on jax
+    builds without the option). Returns True when the distributed
+    runtime is (now) initialized, False when this build/environment
+    cannot (single-process fallback) — callers degrade to the flat
+    single-process lane rather than crash, and the subprocess smoke
+    test (tests/test_distributed.py) skips on False.
+
+    MUST run before anything touches a backend: ``initialize`` rejects
+    an already-materialized XLA client, so this function deliberately
+    avoids ``jax.default_backend()`` / ``jax.process_count()`` on the
+    init path (both instantiate the backend) and gates purely on
+    exceptions.
+    """
+    try:
+        # only meaningful for CPU backends; setting it is side-effect
+        # free elsewhere and must NOT query the backend to find out
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass                             # older jax: option absent
+    try:
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+        return True
+    except RuntimeError:
+        # already initialized (e.g. by the launcher): report what is
+        return jax.process_count() > 1
+    except Exception:
+        return False
+
+
+def make_camr_mesh(K: int, *, axis_name: str = "camr"):
+    """The 1-D CAMR mesh over the GLOBAL device list (all processes).
+
+    ``jax.devices()`` orders devices process-major, which IS the
+    class-major host-block order the two-level lowering assumes: with
+    ``dph`` local devices per process, device ``s`` lives on host
+    ``s // dph`` — exactly ``Topology.host_of``. Built through the
+    ``compat`` shim like every other mesh in the repo.
+    """
+    devs = jax.devices()
+    if len(devs) < K:
+        raise ValueError(f"need {K} devices for the CAMR axis, have "
+                         f"{len(devs)} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count)")
+    return make_mesh((K,), (axis_name,), devices=devs[:K])
+
+
+def detect_topology(k: int, *, alpha: float = 4.0) -> Topology:
+    """Topology implied by the process layout: ``jax.process_count()``
+    hosts when that divides ``k`` (two-level, class-major blocks),
+    otherwise flat. ``alpha`` is the modeled inter/intra cost ratio for
+    the per-edge accounting — it never changes the executed values.
+    """
+    hosts = jax.process_count()
+    if hosts > 1 and k % hosts == 0:
+        return Topology.two_level(hosts, alpha=alpha)
+    return Topology.flat()

@@ -1,0 +1,124 @@
+"""Multi-host execution lane (DESIGN.md §16): a REAL two-process
+``jax.distributed`` run over gloo CPU collectives.
+
+The parent spawns two worker processes (4 local devices each) that form
+one 8-device global mesh through :func:`repro.launch.mesh.make_camr_mesh`
+and run the CAMR shuffle — flat and two-level — as jitted shard_map over
+a globally-sharded array. Every addressable shard must be BITWISE equal
+to the single-process engine oracle. Skips cleanly (never fails) when
+this jax build cannot initialize the distributed runtime; a value
+mismatch is a hard failure.
+"""
+
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_WORKER = textwrap.dedent("""
+    import sys
+    import numpy as np
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core.collective import (make_plan, camr_shuffle,
+        scatter_contributions)
+    from repro.core.engine import CAMRConfig, CAMREngine
+    from repro.core.schedule import SCHEDULE_CACHE
+    from repro.launch.mesh import (detect_topology, init_distributed,
+                                   make_camr_mesh)
+
+    q, k, d = {q}, {k}, {d}
+    pid = int(sys.argv[1])
+    if not init_distributed(coordinator='localhost:{port}',
+                            num_processes=2, process_id=pid):
+        print('SKIP: jax.distributed init unavailable')
+        sys.exit(0)
+
+    K = q * k
+    assert jax.process_count() == 2
+    assert jax.device_count() == K, jax.device_count()
+    assert len(jax.local_devices()) == K // 2
+
+    topo = detect_topology(k)
+    assert topo.key() == (2, 4.0), topo
+    plan_f = make_plan(q, k, d)
+    plan_t = make_plan(q, k, d, topology=topo)
+    mesh = make_camr_mesh(K)
+
+    # identical on both processes: same seed -> same global input
+    rng = np.random.default_rng(7)
+    bg = rng.standard_normal((plan_f.J, k, K, d)).astype(np.float32)
+    contribs = scatter_contributions(plan_f, bg)
+    sharding = NamedSharding(mesh, P('camr'))
+    garr = jax.make_array_from_callback(
+        contribs.shape, sharding, lambda idx: contribs[idx])
+
+    # BITWISE oracle: the serial numpy engine's canonical combine order
+    # (camr_shuffle_reference's np.sum uses a different reduction tree
+    # and is only an allclose oracle — DESIGN.md §11)
+    eng = CAMREngine(CAMRConfig(q=q, k=k, gamma=1), lambda job, sf: sf)
+    datasets = [[bg[j, t] for t in range(k)] for j in range(plan_f.J)]
+    results = eng.run(datasets)
+    for plan, tag in ((plan_f, 'flat'), (plan_t, 'two_level')):
+        fn = jax.jit(shard_map(
+            lambda c: camr_shuffle(plan, c[0], axis_name='camr')[None],
+            mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+        out = jax.block_until_ready(fn(garr))
+        for shard in out.addressable_shards:
+            s = shard.index[0].start
+            got = np.asarray(shard.data)[0]
+            for j in range(plan_f.J):
+                np.testing.assert_array_equal(
+                    got[j], results[s][(j, s)],
+                    err_msg=f'{{tag}} device {{s}} job {{j}} '
+                            f'process {{pid}}')
+
+    # survivor-set re-lowering keyed to the DETECTED two-level topology
+    # (what a mid-stream degrade on this cluster would pull)
+    prog = SCHEDULE_CACHE.program(q, k, Q=K, d=d, topology=topo)
+    deg = SCHEDULE_CACHE.degraded(prog, {{1}})
+    assert deg.coded_rows and prog.topology is topo
+    print('OK', pid)
+""")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.parametrize("q,k", [(2, 4)])
+def test_two_process_distributed_shuffle(q, k):
+    port = _free_port()
+    code = _WORKER.format(q=q, k=k, d=2 * (k - 1), port=port)
+    dph = q * k // 2
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={dph}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    procs = [subprocess.Popen([sys.executable, "-c", code, str(pid)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, env=env)
+             for pid in range(2)]
+    outs = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=600)
+            outs.append((p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    if any("SKIP:" in out for _, out, _ in outs):
+        pytest.skip("jax.distributed unavailable in this environment")
+    for pid, (rc, out, err) in enumerate(outs):
+        assert rc == 0, f"process {pid}:\n{err[-3000:]}"
+        assert f"OK {pid}" in out, f"process {pid}:\n{out}\n{err[-2000:]}"

@@ -80,3 +80,89 @@ def test_cdc_load_context():
 def test_ccdc_invalid_mu():
     with pytest.raises(ValueError):
         loads.ccdc_load(0.17, 6)  # mu*K not integer
+
+# --------------------------------------------------------------------- #
+# two-level (hosts x devices-per-host) cost model — DESIGN.md §16
+# --------------------------------------------------------------------- #
+HIER = [(2, 4), (3, 4), (2, 6), (3, 6), (2, 8), (4, 4)]
+
+
+def _divisors(k):
+    return [h for h in range(1, k + 1) if k % h == 0]
+
+
+@pytest.mark.parametrize("q,k", HIER)
+def test_hierarchical_flat_reduction_identity(q, k):
+    """Pinned identities: hosts=1 (any alpha) and alpha=1 (any hosts)
+    reduce camr_load_hierarchical to camr_load_p2p EXACTLY — the flat
+    topology is the identity case, not an approximation."""
+    p2p = loads.camr_load_p2p(q, k)
+    for alpha in (1.0, 2.0, 4.0, 17.5):
+        assert loads.camr_load_hierarchical(q, k, 1, alpha) == p2p
+    for hosts in _divisors(k):
+        assert loads.camr_load_hierarchical(q, k, hosts, 1.0) == \
+            pytest.approx(p2p, rel=1e-12)
+    unc = loads.uncoded_aggregated_load(q, k)
+    for alpha in (1.0, 3.0, 9.0):
+        assert loads.uncoded_load_hierarchical(q, k, 1, alpha) == unc
+    for hosts in _divisors(k):
+        assert loads.uncoded_load_hierarchical(q, k, hosts, 1.0) == \
+            pytest.approx(unc, rel=1e-12)
+
+
+@pytest.mark.parametrize("q,k", HIER)
+def test_hierarchical_monotone_in_alpha(q, k):
+    """Strictly increasing in alpha whenever hosts >= 2 (slope is the
+    positive inter-host load), constant for hosts = 1."""
+    alphas = [1.0, 1.5, 2.0, 4.0, 8.0]
+    for hosts in _divisors(k):
+        vals = [loads.camr_load_hierarchical(q, k, hosts, a)
+                for a in alphas]
+        uvals = [loads.uncoded_load_hierarchical(q, k, hosts, a)
+                 for a in alphas]
+        if hosts == 1:
+            assert len(set(vals)) == 1 and len(set(uvals)) == 1
+        else:
+            assert all(a < b for a, b in zip(vals, vals[1:]))
+            assert all(a < b for a, b in zip(uvals, uvals[1:]))
+
+
+@pytest.mark.parametrize("q,k", HIER)
+def test_edge_loads_totals_and_cut(q, k):
+    """Both schedules move the same p2p total; the two-level schedule
+    cuts inter-host load by exactly hosts/k — strict when hosts < k."""
+    p2p = loads.camr_load_p2p(q, k)
+    for hosts in _divisors(k):
+        f_intra, f_inter = loads.camr_edge_loads(q, k, hosts, "flat")
+        t_intra, t_inter = loads.camr_edge_loads(q, k, hosts,
+                                                 schedule="two_level")
+        assert f_intra + f_inter == pytest.approx(p2p, rel=1e-12)
+        assert t_intra + t_inter == pytest.approx(p2p, rel=1e-12)
+        assert t_inter * k == pytest.approx(f_inter * hosts, rel=1e-12)
+        if 1 < hosts < k:
+            assert t_inter < f_inter
+        if hosts == 1:
+            assert f_inter == t_inter == 0.0
+        if hosts == k:  # one class per host: no dedup possible
+            assert t_inter == pytest.approx(f_inter, rel=1e-12)
+    # coded two-level never loses to the uncoded plan on the slow edge
+    # (strictly better with >= 2 classes per host; ties at hosts = k
+    # where both degenerate to one packet-equivalent per remote host)
+    for hosts in [h for h in _divisors(k) if h >= 2]:
+        _, t_inter = loads.camr_edge_loads(q, k, hosts)
+        uncoded_inter = hosts / k
+        if hosts < k:
+            assert t_inter < uncoded_inter
+        else:
+            assert t_inter == pytest.approx(uncoded_inter, rel=1e-12)
+
+
+def test_hierarchical_validation():
+    with pytest.raises(ValueError):
+        loads.camr_edge_loads(2, 4, hosts=3)      # 3 does not divide 4
+    with pytest.raises(ValueError):
+        loads.camr_edge_loads(2, 4, 2, schedule="mesh")
+    with pytest.raises(ValueError):
+        loads.camr_load_hierarchical(2, 4, hosts=0)
+    with pytest.raises(ValueError):
+        loads.uncoded_load_hierarchical(2, 6, hosts=4)
