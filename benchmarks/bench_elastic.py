@@ -149,6 +149,80 @@ def bench_config(q, k, waves, kill_at, rejoin_at, worker, name):
     )
 
 
+# (q, k, hosts) — whole-host fault domains (DESIGN.md §17); mesh-free
+# like the rest of this bench (CI runs on one CPU device)
+HOST_CONFIGS = [(2, 4, 2), (2, 6, 3)]
+SMOKE_HOST_CONFIGS = [(2, 4, 2)]
+
+
+def _host_recovery_path(q, k, hosts) -> tuple:
+    """(cold s, warm s, warm misses): the ``kill_host`` boundary's
+    surviving-topology schedule lookup as a cold miss (full two-level/
+    flat re-lowering) vs a ``warm_host_survivors`` hit — the exact
+    ``ScheduleCache.program`` call ``ShuffleStream.set_topology`` pays
+    on the recovery critical path. Best of 3; the warm pass then walks
+    the WHOLE survivor ladder and reports any cold misses it paid
+    (must be zero: the §17 warm-recovery contract)."""
+    from repro.core.schedule import Topology, surviving_topology
+    d = 2 * (k - 1)                      # (k-1) | d, same as the tests
+    cold, hot = [], []
+    misses = 0
+    for _ in range(3):
+        SCHEDULE_CACHE.clear()
+        SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
+                               topology=Topology.two_level(hosts))
+        t0 = time.perf_counter()
+        SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
+                               topology=surviving_topology(hosts - 1, k))
+        cold.append(time.perf_counter() - t0)
+        SCHEDULE_CACHE.clear()
+        prog = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
+                                      topology=Topology.two_level(hosts))
+        SCHEDULE_CACHE.warm_host_survivors(prog,
+                                           max_host_failures=hosts - 1)
+        m0 = SCHEDULE_CACHE.stats()["misses"]
+        t0 = time.perf_counter()
+        SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
+                               topology=surviving_topology(hosts - 1, k))
+        hot.append(time.perf_counter() - t0)
+        for lost in range(2, hosts):     # the rest of the ladder
+            SCHEDULE_CACHE.program(
+                q, k, Q=q * k, d=d,
+                topology=surviving_topology(hosts - lost, k))
+        misses = SCHEDULE_CACHE.stats()["misses"] - m0
+    return min(cold), min(hot), misses
+
+
+def host_rows(smoke: bool, strict: bool) -> list:
+    """Host-kill lane: warm vs cold surviving-topology re-homing."""
+    out = []
+    for q, k, hosts in (SMOKE_HOST_CONFIGS if smoke else HOST_CONFIGS):
+        name = f"elastic_host_q{q}_k{k}_h{hosts}"
+        cold_s, warm_s, misses = _host_recovery_path(q, k, hosts)
+        if misses != 0:
+            raise SystemExit(
+                f"{name}: warm survivor-ladder walk paid {misses} "
+                "lowerings — warm_host_survivors must make host-loss "
+                "recovery a pure cache hit (DESIGN.md §17)")
+        if not warm_s < cold_s:
+            msg = (f"{name}: warm host recovery {warm_s * 1e6:.0f}us "
+                   f"did not beat cold re-lowering {cold_s * 1e6:.0f}us")
+            if strict:
+                raise SystemExit(msg)
+            print(f"WARNING: {msg} (set CAMR_BENCH_STRICT=1 to make "
+                  "this fatal)", file=sys.stderr)
+        out.append({
+            "name": name,
+            "us_per_call": warm_s * 1e6,
+            "config": {"q": q, "k": k, "hosts": hosts},
+            "derived": (f"kill_host recovery cold={cold_s * 1e6:.0f}us "
+                        f"warm={warm_s * 1e6:.0f}us "
+                        f"warm_lowerings=0 ladder={hosts - 1} "
+                        f"survivor topologies"),
+        })
+    return out
+
+
 def rows(smoke: bool | None = None):
     """Suite entry point for benchmarks/run.py."""
     if smoke is None:
@@ -181,6 +255,7 @@ def rows(smoke: bool | None = None):
                         f"recover_steps={r['warm_steps']} "
                         f"migrations={r['migrations']}"),
         })
+    out.extend(host_rows(smoke, strict))
     return out
 
 

@@ -22,13 +22,19 @@ import os
 import sys
 import time
 
+import numpy as np
+
 from repro.core.collective import camr_edge_bytes, make_plan
 from repro.core.loads import (camr_edge_loads, camr_load_hierarchical,
                               uncoded_load_hierarchical)
-from repro.core.schedule import Topology
+from repro.core.schedule import Topology, payload_words
 
 # every config has hosts < k: the dedup factor hosts/k is a strict cut
 CONFIGS = [(2, 4, 2), (3, 4, 2), (2, 6, 2), (2, 6, 3)]
+
+# (q, k) x wire lane for the integrity overhead lane (DESIGN.md §17)
+INTEGRITY_CONFIGS = [(2, 4), (2, 6), (3, 4)]
+INTEGRITY_LANES = [("f32", 4), ("bf16", 2)]
 
 
 def _gate(ok: bool, msg: str) -> None:
@@ -83,6 +89,87 @@ def rows(d: int | None = None, alpha: float = 4.0):
                         f"{camr_load_hierarchical(q, k, hosts, alpha):.3f}"
                         ),
         })
+    out.extend(integrity_rows(d))
+    return out
+
+
+def integrity_rows(d: int | None = None) -> list:
+    """Self-verifying wire overhead (DESIGN.md §17).
+
+    The integrity lane folds ONE checksum word (the XOR of the
+    packet's ``pk`` payload words) into each coded packet, widening
+    rows from ``pk`` to ``pk + 1`` wire words. Gates, all
+    deterministic:
+
+    * the wire-word overhead is EXACTLY ``1/pk`` on both lanes (the
+      closed form the augmented reshape implements — one word per
+      packet, nothing else);
+    * zero false positives: a numpy mirror of the decode-side fold
+      accepts every clean packet;
+    * zero false negatives at one word: EVERY single-word flip —
+      payload or checksum word, any bit pattern — is detected
+      (exhaustive sweep over all ``(round, word)`` positions);
+    * XOR-linearity: checksums of XOR-combined packets XOR-combine —
+      the property that lets the fold commute with the codec so the
+      decode side can verify without re-deriving any schedule state.
+    """
+    out = []
+    rng = np.random.default_rng(0)
+    for q, k in INTEGRITY_CONFIGS:
+        dd = 2 * (k - 1) if d is None else d
+        for lane, itemsize in INTEGRITY_LANES:
+            wp = payload_words(dd, itemsize, k)
+            _gate(wp % (k - 1) == 0,
+                  f"integrity q{q}k{k} {lane}: payload {wp} words does "
+                  f"not split into k-1={k - 1} packets")
+            pk = wp // (k - 1)
+            t0 = time.perf_counter()
+            # numpy mirror of the wire fold: [G, k-1, pk] -> + csum word
+            G = 8
+            w = rng.integers(0, 2 ** 32, size=(G, k - 1, pk),
+                             dtype=np.uint32)
+            csum = np.bitwise_xor.reduce(w, axis=2)
+            aug = np.concatenate([w, csum[:, :, None]], axis=2)
+            ratio = aug.size / w.size
+            _gate(abs(ratio - (pk + 1) / pk) < 1e-12,
+                  f"integrity q{q}k{k} {lane}: wire overhead {ratio} "
+                  f"!= (pk+1)/pk = {(pk + 1) / pk}")
+            # zero false positives on the clean wire
+            calc = np.bitwise_xor.reduce(aug[:, :, :pk], axis=2)
+            _gate(bool((calc == aug[:, :, pk]).all()),
+                  f"integrity q{q}k{k} {lane}: clean packet failed "
+                  "its own checksum")
+            # zero false negatives at one word: exhaustive flip sweep
+            missed = 0
+            for r in range(k - 1):
+                for word in range(pk + 1):
+                    for bits in (1, 0x80000000, 0xDEADBEEF):
+                        t = aug.copy()
+                        t[0, r, word] ^= np.uint32(bits)
+                        c = np.bitwise_xor.reduce(t[0, :, :pk], axis=1)
+                        if (c == t[0, :, pk]).all():
+                            missed += 1
+            _gate(missed == 0,
+                  f"integrity q{q}k{k} {lane}: {missed} single-word "
+                  "flips evaded the checksum")
+            # XOR-linearity: the fold commutes with the codec
+            a, b = aug[0], aug[1]
+            _gate(bool((np.bitwise_xor.reduce((a ^ b)[:, :pk], axis=1)
+                        == (a ^ b)[:, pk]).all()),
+                  f"integrity q{q}k{k} {lane}: checksum not XOR-linear")
+            us = (time.perf_counter() - t0) * 1e6
+            flips = (k - 1) * (pk + 1) * 3
+            out.append({
+                "name": f"integrity_q{q}_k{k}_{lane}",
+                "us_per_call": us,
+                "config": {"q": q, "k": k, "d": dd, "lane": lane,
+                           "itemsize": itemsize},
+                "overhead_ratio": (pk + 1) / pk,
+                "derived": (f"pk={pk} wire {pk}->{pk + 1} words/packet "
+                            f"(+{100 / pk:.1f}%) detected {flips}/"
+                            f"{flips} single-word flips, 0 false "
+                            "positives"),
+            })
     return out
 
 

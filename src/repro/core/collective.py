@@ -143,7 +143,8 @@ class CAMRPlan:
 
 
 def make_plan(q: int, k: int, d: int,
-              topology: Topology | None = None) -> CAMRPlan:
+              topology: Topology | None = None, *,
+              gateway_avoid=frozenset()) -> CAMRPlan:
     """Lower the full SPMD schedule for a (q, k) CAMR cluster.
 
     Served from the structural :data:`~repro.core.schedule.SCHEDULE_CACHE`
@@ -152,8 +153,11 @@ def make_plan(q: int, k: int, d: int,
     ``topology=None`` (or flat) lowers the exact schedules every prior
     PR lowered; a two-level :class:`Topology` additionally lowers the
     host-aware relay overlay (DESIGN.md §16) that the executor uses to
-    deduplicate inter-host packet copies. Outputs are bitwise identical
-    either way.
+    deduplicate inter-host packet copies (an :class:`AutoTopology`
+    marker resolves via the cost model first). ``gateway_avoid``
+    re-homes phase-A gateways away from the named devices (straggler
+    failover, DESIGN.md §17). Outputs are bitwise identical for every
+    topology and gateway assignment.
     """
     if k < 3:
         # k = 2 degenerates (single-packet chunks, blocks of size 1);
@@ -162,7 +166,8 @@ def make_plan(q: int, k: int, d: int,
     if d % (k - 1):
         raise ValueError(f"shard width d={d} must be divisible by k-1={k - 1}")
     program = SCHEDULE_CACHE.program(q, k, Q=q * k, d=d,
-                                     topology=topology)
+                                     topology=topology,
+                                     gateway_avoid=gateway_avoid)
     return CAMRPlan(q=q, k=k, d=d, program=program)
 
 
@@ -387,8 +392,23 @@ def _decode_stage(recv, ctx, T: StageTables, me, *, k, pk, codec,
     return chunk.reshape(n, (k - 1) * pk)
 
 
+def _corrupt_delta(delta, me, corrupt):
+    """Flip ``bits`` in one wire word of one device's outgoing Δ —
+    the deterministic single-word fault model of the integrity lane
+    (DESIGN.md §17). Injected AFTER the checksum fold, so it lands on
+    the wire exactly as a transit bit-flip would: the sender's local
+    decode context stays clean and every receiver of the tampered
+    packet sees a checksum mismatch."""
+    if corrupt is None:
+        return delta
+    cdev, crow, cword, cbits = corrupt
+    bump = jnp.where(me == cdev, jnp.uint32(cbits), jnp.uint32(0))
+    return delta.at[crow, cword].set(delta[crow, cword] ^ bump)
+
+
 def _stage_coded_batched(axis_name, wire, T: StageTables, me, *,
-                         q, k, K, pk, router, codec, use_kernels):
+                         q, k, K, pk, router, codec, use_kernels,
+                         corrupt=None):
     """One coded stage as ``k-1`` grouped collectives (DESIGN.md §4).
 
     Returns decoded chunks ``u32[n, wp]`` — row order = the stage's
@@ -401,6 +421,7 @@ def _stage_coded_batched(axis_name, wire, T: StageTables, me, *,
     R = int(T.R)
     ctx, delta = _encode_stage(wire, T, me, k=k, pk=pk, codec=codec,
                                use_kernels=use_kernels)
+    delta = _corrupt_delta(delta, me, corrupt)
     recv = []
     for r in range(1, k):
         if router == "all_to_all":
@@ -431,7 +452,7 @@ def _stage_coded_batched(axis_name, wire, T: StageTables, me, *,
 
 def _stage_coded_two_level(axis_name, wire, T: StageTables,
                            X: HostTables, me, *, q, k, K, pk, router,
-                           codec, use_kernels):
+                           codec, use_kernels, corrupt=None):
     """One coded stage on a two-level topology (DESIGN.md §16).
 
     Phase A is :func:`_stage_coded_batched`'s round exchange driven by
@@ -451,6 +472,7 @@ def _stage_coded_two_level(axis_name, wire, T: StageTables,
     n = T.n
     ctx, delta = _encode_stage(wire, T, me, k=k, pk=pk, codec=codec,
                                use_kernels=use_kernels)
+    delta = _corrupt_delta(delta, me, corrupt)
     # ---- phase A: flat round exchange, primary deliveries only ------- #
     recv = []
     for r in range(1, k):
@@ -534,7 +556,8 @@ def _stage_coded_looped(axis_name, wire, T: StageTables, rounds_list, me, *,
 def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
                  axis_name: str, mode: str = "batched",
                  router: str = "all_to_all", codec: str = "fused",
-                 use_kernels=None, debug: bool = False) -> jnp.ndarray:
+                 use_kernels=None, debug: bool = False,
+                 verify_wire: bool = False, corrupt=None):
     """3-stage CAMR coded shuffle: contribs [J_own, k-1, K, d] -> [J, d].
 
     ``codec="fused"`` (default) runs the single-pass gather-XOR codec
@@ -552,6 +575,23 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     the assembly folds batch aggregates in the engine's canonical
     combine order (DESIGN.md §11) — the contract the training path's
     cross-mode parameter identity rests on.
+
+    ``verify_wire=True`` runs the self-verifying wire (DESIGN.md §17):
+    every coded packet carries one extra u32 checksum word — the XOR
+    of its payload words — folded through the SAME codec (checksums of
+    XOR-combined packets XOR-combine, so coded data verifies without
+    decoding first). Returns ``(out, bad)`` where ``bad`` is this
+    device's count of decoded rows whose recomputed checksum
+    mismatches: 0 on every healthy wave (valid rows decode to exact
+    packets), and ANY single corrupted wire word in stages 1+2 —
+    payload or checksum, flat or relay edge — is counted (a one-word
+    delta cannot cancel between a payload fold and its checksum).
+    ``corrupt=(stage, device, row, word, bits)`` XORs ``bits`` into
+    one outgoing Δ word post-encode — the deterministic fault the
+    chaos layer replays. Requires the fused batched codec; the jnp
+    gather lane is forced (index tables are row-oriented, so the
+    widened rows reuse the same tables, but the u16 Pallas kernels
+    assume unaugmented packet geometry).
     """
     prog = plan.program
     q, k, K, J, J_own, d = (plan.q, plan.k, plan.K, plan.J, plan.J_own,
@@ -570,7 +610,22 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
         raise ValueError("two-level topology requires mode='batched' "
                          "(the looped legacy router has no host-aware "
                          "relay lane)")
-    use_kernels = _resolve_kernels(use_kernels)
+    if verify_wire:
+        if codec != "fused" or mode != "batched":
+            raise ValueError("verify_wire requires codec='fused' and "
+                             "mode='batched' (the checksum word rides "
+                             "the row-oriented fused index tables)")
+        if debug:
+            raise ValueError("verify_wire and debug are mutually "
+                             "exclusive (different return shapes)")
+        use_kernels = False
+    else:
+        if corrupt is not None:
+            raise ValueError("corrupt injection without verify_wire "
+                             "would silently mis-reduce — exactly the "
+                             "failure mode the integrity lane exists "
+                             "to rule out")
+        use_kernels = _resolve_kernels(use_kernels)
     me = lax.axis_index(axis_name)
     # wire lane (DESIGN.md §12): wp u32 words per shard — d for 4-byte
     # dtypes, ceil(d/2) (+ pad to a packet multiple) for packed 16-bit
@@ -582,24 +637,56 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
 
     wire = _wire_buffer(contribs, wp=wp, codec=codec,
                         use_kernels=use_kernels)  # [J_own, k-1, K, wp]
+    pkv = pk
+    if verify_wire:
+        # widen every packet row from pk to pk+1 u32 words: payload +
+        # its XOR checksum. The fused tables index packet ROWS, so the
+        # same enc_src/dec_src/dec_recv drive the widened buffer; row
+        # ids are unchanged by the reshape below.
+        w4 = wire.reshape(*wire.shape[:-1], k - 1, pk)
+        csum = _xor_reduce(w4, axis=w4.ndim - 1)
+        wire = jnp.concatenate([w4, csum[..., None]], axis=-1)
+        wire = wire.reshape(*wire.shape[:-2], (k - 1) * (pk + 1))
+        pkv = pk + 1
+    if corrupt is not None:
+        cst, cdev, crow, cword, cbits = (int(x) for x in corrupt)
+        if not 0 <= cword < pkv:
+            raise ValueError(f"corrupt word {cword} outside packet "
+                             f"[0, {pkv})")
+        if not cbits:
+            raise ValueError("corrupt bits must be nonzero")
 
     # ========== stages 1 + 2: one shared coded-exchange machine ======== #
     stage_vals = {}
+    bad = jnp.zeros((), dtype=jnp.int32)
     for stage in (1, 2):
         T = prog.stage_tables(stage)
+        spec = ((cdev, crow, cword, cbits)
+                if corrupt is not None and cst == stage else None)
         if mode == "batched" and two_level:
             decoded = _stage_coded_two_level(
                 axis_name, wire, T, prog.host_tables(stage), me, q=q,
-                k=k, K=K, pk=pk, router=router, codec=codec,
-                use_kernels=use_kernels)
+                k=k, K=K, pk=pkv, router=router, codec=codec,
+                use_kernels=use_kernels, corrupt=spec)
         elif mode == "batched":
             decoded = _stage_coded_batched(
-                axis_name, wire, T, me, q=q, k=k, K=K, pk=pk,
-                router=router, codec=codec, use_kernels=use_kernels)
+                axis_name, wire, T, me, q=q, k=k, K=K, pk=pkv,
+                router=router, codec=codec, use_kernels=use_kernels,
+                corrupt=spec)
         else:
             decoded = _stage_coded_looped(
                 axis_name, wire, T, prog.round_perms(stage), me,
                 k=k, pk=pk, codec=codec, use_kernels=use_kernels)
+        if verify_wire:
+            # recompute each decoded row's checksum; non-member rows
+            # decode garbage by design and are masked out (T.valid)
+            dec3 = decoded.reshape(-1, k - 1, pkv)
+            calc = _xor_reduce(dec3[:, :, :pk], axis=2)
+            bad_rows = (calc != dec3[:, :, pk]) & dev(T.valid)[:, None]
+            bad = bad + jnp.sum(bad_rows.astype(jnp.int32))
+            # strip checksum words: the payload words are bit-for-bit
+            # the unverified decode's output
+            decoded = dec3[:, :, :pk].reshape(-1, (k - 1) * pk)
         stage_vals[stage] = _from_wire(decoded, dtype, d)
     stage1_val = stage_vals[1]   # [J, d]; row j valid where I own job j
     stage2_val = stage_vals[2]   # [n_s2, d]; rows at my s2_ord ordinals
@@ -641,6 +728,8 @@ def camr_shuffle(plan: CAMRPlan, contribs: jnp.ndarray, *,
     if debug:
         return dict(out=out, stage1=stage1_val, stage2=s2_sel, stage3=s3_sel,
                     own_sum=own_sum[d_slot], is_own=d_isown)
+    if verify_wire:
+        return out, bad
     return out
 
 
@@ -742,7 +831,9 @@ class ShuffleStream:
                  wave_batch: int = 1, mode: str = "batched",
                  router: str = "all_to_all", codec: str = "fused",
                  use_kernels=None, degraded_lane: str = "device",
-                 topology: Topology | None = None):
+                 topology: Topology | None = None,
+                 gateway_avoid=frozenset(), verify_wire: bool = False,
+                 max_replays: int = 2):
         if k < 3:
             raise ValueError("TPU collective path requires k >= 3")
         if d % (k - 1):
@@ -770,46 +861,197 @@ class ShuffleStream:
         if degraded_lane not in ("device", "host"):
             raise ValueError(f"unknown degraded_lane {degraded_lane!r}")
         self.degraded_lane = degraded_lane
-        self.topology = _normalize_topology(topology)
+        from .schedule import resolve_topology
+        self.topology = resolve_topology(topology, q, k)
         if self.topology is not None:
             self.topology.check(q, k)
             if mode != "batched":
                 raise ValueError("two-level topology requires "
                                  "mode='batched'")
-        self._jitted: dict[int, object] = {}   # W -> compiled executor
+        self._gateway_avoid = frozenset(int(x)
+                                        for x in (gateway_avoid or ()))
+        if any(not 0 <= x < self.K for x in self._gateway_avoid):
+            raise ValueError(f"gateway_avoid "
+                             f"{sorted(self._gateway_avoid)} has "
+                             f"devices outside [0, {self.K})")
+        self.verify_wire = bool(verify_wire)
+        if self.verify_wire and (codec != "fused" or mode != "batched"):
+            raise ValueError("verify_wire requires codec='fused' and "
+                             "mode='batched'")
+        if max_replays < 0:
+            raise ValueError("max_replays must be >= 0")
+        self.max_replays = max_replays
+        self._jitted: dict = {}                # executor key -> compiled
         self._pending: list = []               # waves awaiting dispatch
-        self._in_flight: deque = deque()       # (out, W, dispatch time)
+        self._in_flight: deque = deque()       # (out, W, t0, buf)
         self._done: list = []                  # host [K, J, d] outputs
+        self._corrupt = None                   # one-shot fault spec
         self.dispatches = 0                    # program executions issued
-        self.compiles = 0                      # executors traced (per W)
+        self.compiles = 0                      # executors traced (per key)
         self.degraded_compiles = 0             # degraded execs built (§15)
         self._failed: frozenset = frozenset()  # current survivor-set gap
         self.swaps = 0                         # degrade/restore events
+        self.host_swaps = 0                    # topology re-homings (§17)
+        self.wire_faults = 0                   # checksum-flagged waves
+        self.wire_replays = 0                  # bitwise replays issued
         self.wave_times: list[float] = []      # dispatch->collect wall s
 
-    # -- compiled executor per stack width ------------------------------ #
-    def _fn(self, W: int):
-        if W not in self._jitted:
+    # -- compiled executor per (width, topology, gateways, fault) ------- #
+    def _gw(self) -> frozenset:
+        """Gateway preference in effect — flat has no gateways."""
+        return (self._gateway_avoid if self.topology is not None
+                else frozenset())
+
+    def _fn(self, W: int, corrupt=None):
+        key = (W,
+               None if self.topology is None else self.topology.key(),
+               tuple(sorted(self._gw())), self.verify_wire, corrupt)
+        if key not in self._jitted:
             from jax.sharding import PartitionSpec as P
 
             from repro.compat import shard_map
             prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
                                           d=W * self.d,
-                                          topology=self.topology)
+                                          topology=self.topology,
+                                          gateway_avoid=self._gw())
             plan = CAMRPlan(q=self.q, k=self.k, d=W * self.d,
                             program=prog)
+            verify = self.verify_wire
 
             def body(c):
-                return camr_shuffle(plan, c[0], axis_name=self.axis_name,
-                                    mode=self.mode, router=self.router,
-                                    codec=self.codec,
-                                    use_kernels=self.use_kernels)[None]
+                r = camr_shuffle(plan, c[0], axis_name=self.axis_name,
+                                 mode=self.mode, router=self.router,
+                                 codec=self.codec,
+                                 use_kernels=self.use_kernels,
+                                 verify_wire=verify, corrupt=corrupt)
+                if verify:
+                    out, bad = r
+                    return out[None], bad[None]
+                return r[None]
 
             self.compiles += 1
-            self._jitted[W] = jax.jit(shard_map(
+            self._jitted[key] = jax.jit(shard_map(
                 body, mesh=self.mesh, in_specs=P(self.axis_name),
                 out_specs=P(self.axis_name)))
-        return self._jitted[W]
+        return self._jitted[key]
+
+    # -- fault domains & gateway failover (DESIGN.md §17) --------------- #
+    @property
+    def gateway_avoid(self) -> frozenset:
+        return self._gw()
+
+    def set_topology(self, topology) -> None:
+        """Re-home subsequent dispatches onto ``topology`` — the
+        whole-host recovery path: after ``HostMembership.kill_host``,
+        pass its ``current_topology()`` here. Purely a re-keying:
+        executors compiled for other topologies stay resident (a later
+        rejoin swaps back retrace-free) and the schedule comes from the
+        warm cache — zero cold lowerings after
+        :meth:`warm_host_survivors`. Waves already in flight were
+        dispatched under the old topology and complete unchanged;
+        outputs are bitwise identical across topologies (§16)."""
+        from .schedule import resolve_topology
+        t = resolve_topology(topology, self.q, self.k)
+        if t is not None:
+            t.check(self.q, self.k)
+            if self.mode != "batched":
+                raise ValueError("two-level topology requires "
+                                 "mode='batched'")
+        if t != self.topology:
+            self.topology = t
+            self.host_swaps += 1
+
+    def set_gateway_avoid(self, avoid) -> None:
+        """Prefer phase-A gateways OUTSIDE ``avoid`` for subsequent
+        dispatches (straggler failover — feed it
+        ``Membership.gateway_avoid()``). Joins the executor and
+        schedule-cache keys; outputs are bitwise identical for every
+        assignment, so this is pure routing policy."""
+        fs = frozenset(int(x) for x in (avoid or ()))
+        if any(not 0 <= x < self.K for x in fs):
+            raise ValueError(f"gateway_avoid {sorted(fs)} has devices "
+                             f"outside [0, {self.K})")
+        self._gateway_avoid = fs
+
+    def warm_host_survivors(self, *, max_host_failures: int = 1) -> int:
+        """Pre-pay the surviving-topology lowering of every loss of up
+        to ``max_host_failures`` hosts (ScheduleCache
+        .warm_host_survivors), so a later :meth:`set_topology` on the
+        kill path is a pure cache hit. Returns survivor topologies
+        warmed."""
+        if self.topology is None:
+            raise ValueError("warm_host_survivors needs a two-level "
+                             "stream (flat has no hosts to lose)")
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                      d=self.d, topology=self.topology,
+                                      gateway_avoid=self._gw())
+        return SCHEDULE_CACHE.warm_host_survivors(
+            prog, max_host_failures=max_host_failures)
+
+    def inject_corruption(self, *, stage: int = 1, device: int = 0,
+                          row=None, word: int = 0, bits: int = 1) -> None:
+        """Arm a ONE-SHOT deterministic wire fault: the next dispatched
+        wave XORs ``bits`` into outgoing Δ word ``(row, word)`` of
+        ``device`` in coded stage ``stage`` (the chaos layer's
+        ``CorruptPacket``). The supervisor detects it via the checksum
+        word and replays the wave bitwise through the clean executor —
+        the transient-fault model. ``row=None`` picks the device's
+        first participating group row so the tampered packet is always
+        actually sent."""
+        if not self.verify_wire:
+            raise ValueError("inject_corruption needs verify_wire=True "
+                             "— corrupting an unverified wire would "
+                             "silently mis-reduce")
+        if stage not in (1, 2):
+            raise ValueError(f"stage must be 1 or 2, got {stage}")
+        if not 0 <= device < self.K:
+            raise ValueError(f"device {device} outside [0, {self.K})")
+        if not 0 < int(bits) < 2 ** 32:
+            raise ValueError("bits must be a nonzero u32 pattern")
+        prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
+                                      d=self.d, topology=self.topology,
+                                      gateway_avoid=self._gw())
+        T = prog.stage_tables(stage)
+        if row is None:
+            rows = np.flatnonzero(np.asarray(T.valid)[device])
+            if not len(rows):
+                raise ValueError(f"device {device} participates in no "
+                                 f"stage-{stage} group")
+            row = int(rows[0])
+        if not 0 <= int(row) < T.n:
+            raise ValueError(f"row {row} outside [0, {T.n})")
+        self._corrupt = (int(stage), int(device), int(row), int(word),
+                         int(bits))
+
+    def _take_corrupt(self):
+        spec, self._corrupt = self._corrupt, None
+        return spec
+
+    def _verified(self, res, bad, buf, W: int):
+        """Supervisor half of the integrity lane: block on the per-
+        device mismatch counts; on any fault, replay the SAME wave
+        through the clean executor (transient-fault model) up to
+        ``max_replays`` times, then raise ``WireCorruptionError``.
+        Replays are bitwise — the payload words a clean pass decodes
+        are exactly the unverified lane's (DESIGN.md §17)."""
+        total = int(np.asarray(jax.block_until_ready(bad)).sum())
+        if total:
+            self.wire_faults += 1
+        replays = 0
+        while total:
+            if replays >= self.max_replays:
+                from repro.runtime.fault import WireCorruptionError
+                raise WireCorruptionError(
+                    f"wave failed wire verification after {replays} "
+                    f"bitwise replays ({total} corrupted packet rows "
+                    "persist) — persistent corruption, not a "
+                    "transient fault; quarantine the link")
+            replays += 1
+            self.wire_replays += 1
+            self.dispatches += 1
+            res, bad = self._fn(W)(buf)
+            total = int(np.asarray(jax.block_until_ready(bad)).sum())
+        return res
 
     # -- live elasticity (DESIGN.md §14) -------------------------------- #
     @property
@@ -839,7 +1081,8 @@ class ShuffleStream:
             self.restore()
             return
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                      d=self.d, topology=self.topology)
+                                      d=self.d, topology=self.topology,
+                                      gateway_avoid=self._gw())
         SCHEDULE_CACHE.degraded(prog, failed)   # validate + warm
         if failed != self._failed:
             self._failed = failed
@@ -868,7 +1111,8 @@ class ShuffleStream:
             from repro.runtime.fault import build_degraded_executor
             prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
                                           d=W * self.d,
-                                          topology=self.topology)
+                                          topology=self.topology,
+                                          gateway_avoid=self._gw())
             self.degraded_compiles += 1
             return build_degraded_executor(prog, failed, W * self.d,
                                            dtype)
@@ -887,7 +1131,8 @@ class ShuffleStream:
         resident."""
         from itertools import combinations
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
-                                      d=self.d, topology=self.topology)
+                                      d=self.d, topology=self.topology,
+                                      gateway_avoid=self._gw())
         SCHEDULE_CACHE.warm_survivors(prog, max_failures=max_failures)
         warmed = 0
         for r in range(1, max_failures + 1):
@@ -918,7 +1163,8 @@ class ShuffleStream:
         from repro.runtime.fault import degraded_shuffle_host
         prog = SCHEDULE_CACHE.program(self.q, self.k, Q=self.K,
                                       d=W * self.d,
-                                      topology=self.topology)
+                                      topology=self.topology,
+                                      gateway_avoid=self._gw())
         return degraded_shuffle_host(prog, self._failed,
                                      np.asarray(buf))
 
@@ -959,19 +1205,29 @@ class ShuffleStream:
         self.dispatches += 1
         if self._failed:
             return self._degraded_exec(contribs, 1)
+        if self.verify_wire:
+            res, bad = self._fn(1, corrupt=self._take_corrupt())(contribs)
+            return self._verified(res, bad, contribs, 1)
         return self._fn(1)(contribs)
 
     def stats(self) -> dict:
         """Executor-reuse counters (``compiles`` stays flat while
         ``dispatches`` grows on a steady-state stream — including
-        across degrade/restore ``swaps``)."""
+        across degrade/restore ``swaps`` and topology
+        ``host_swaps``)."""
         return dict(dispatches=self.dispatches, compiles=self.compiles,
-                    widths=sorted(self._jitted), swaps=self.swaps,
+                    widths=sorted({key[0] for key in self._jitted}),
+                    swaps=self.swaps,
                     failed=tuple(sorted(self._failed)),
                     degraded_compiles=self.degraded_compiles,
                     degraded_lane=self.degraded_lane,
                     topology=(None if self.topology is None
-                              else self.topology.key()))
+                              else self.topology.key()),
+                    gateway_avoid=tuple(sorted(self._gw())),
+                    host_swaps=self.host_swaps,
+                    verify_wire=self.verify_wire,
+                    wire_faults=self.wire_faults,
+                    wire_replays=self.wire_replays)
 
     def _dispatch(self) -> None:
         waves, self._pending = self._pending, []
@@ -981,18 +1237,28 @@ class ShuffleStream:
                else np.concatenate([np.asarray(w) for w in waves],
                                    axis=-1))
         t0 = time.perf_counter()
+        keep = None
         if self._failed:
+            # degraded waves run the dense survivor-set executor — no
+            # coded wire, nothing to checksum (host-oracle-gated lane)
             out = self._degraded_exec(buf, len(waves))
+        elif self.verify_wire:
+            out = self._fn(len(waves), corrupt=self._take_corrupt())(buf)
+            keep = buf                  # retained for a bitwise replay
         else:
             out = self._fn(len(waves))(buf)    # async: returns immediately
         self.dispatches += 1
-        self._in_flight.append((out, len(waves), t0))
+        self._in_flight.append((out, len(waves), t0, keep))
         while len(self._in_flight) > self.depth:
             self._collect_oldest()
 
     def _collect_oldest(self) -> None:
-        out, W, t0 = self._in_flight.popleft()
-        arr = np.asarray(jax.block_until_ready(out))   # [K, J, W*d]
+        out, W, t0, buf = self._in_flight.popleft()
+        if isinstance(out, tuple):                     # integrity lane
+            res = self._verified(out[0], out[1], buf, W)
+            arr = np.asarray(jax.block_until_ready(res))
+        else:
+            arr = np.asarray(jax.block_until_ready(out))   # [K, J, W*d]
         self.wave_times.append(time.perf_counter() - t0)
         if W == 1:
             self._done.append(arr)

@@ -63,6 +63,9 @@ from .placement import Placement, make_placement
 
 __all__ = [
     "Topology",
+    "AutoTopology",
+    "resolve_topology",
+    "surviving_topology",
     "HostTables",
     "StageTables",
     "ShuffleProgram",
@@ -120,6 +123,20 @@ class Topology:
                              f"(got {hosts}); use Topology.flat()")
         return cls(hosts=hosts, alpha=float(alpha))
 
+    @classmethod
+    def auto(cls, hosts: int, alpha: float = 4.0) -> "AutoTopology":
+        """Defer the flat-vs-two-level choice to plan time.
+
+        Returns an :class:`AutoTopology` marker that every lowering
+        entry point resolves against the configuration's ``(q, k)``
+        via the closed-form cost model (DESIGN.md §16 follow-on):
+        two-level wins exactly when its hierarchical cost
+        ``camr_load_hierarchical`` strictly beats the FLAT schedule
+        priced on the same hierarchy (which reduces to
+        ``camr_load_p2p`` at ``alpha = 1`` — where the pick is flat).
+        """
+        return AutoTopology(hosts=hosts, alpha=float(alpha))
+
     @property
     def is_flat(self) -> bool:
         return self.hosts <= 1
@@ -149,6 +166,67 @@ class Topology:
         if self.is_flat:
             return None
         return (self.hosts, float(self.alpha))
+
+
+@dataclass(frozen=True)
+class AutoTopology:
+    """Plan-time marker: pick flat vs two-level from the cost model.
+
+    Not a :class:`Topology` — it has no lowering of its own; every
+    entry point that accepts a topology calls :func:`resolve_topology`
+    first, which replaces this marker with either ``None`` (flat) or a
+    concrete ``Topology.two_level(hosts, alpha)`` for the
+    configuration's ``(q, k)``. The decision compares the two
+    schedules priced on the SAME hierarchy (``intra + alpha * inter``
+    per :func:`repro.core.loads.camr_edge_loads`): ties — including
+    ``alpha = 1``, where both collapse to
+    :func:`~repro.core.loads.camr_load_p2p`, and ``hosts = k``, where
+    no packet has two same-host receivers to deduplicate — go to flat
+    (the identity lowering, no overlay to build or relay to run).
+    """
+
+    hosts: int
+    alpha: float = 4.0
+
+    def resolve(self, q: int, k: int) -> "Topology | None":
+        from .loads import camr_edge_loads, camr_load_hierarchical
+        if self.hosts < 2 or k % self.hosts:
+            return None                      # two-level can't lower
+        intra_f, inter_f = camr_edge_loads(q, k, self.hosts,
+                                           schedule="flat")
+        flat_cost = intra_f + self.alpha * inter_f
+        two_cost = camr_load_hierarchical(q, k, self.hosts, self.alpha)
+        # strict win with a relative tolerance: at alpha = 1 (or
+        # hosts = k) the two costs are EQUAL analytically and differ
+        # only by fp association — a tie must resolve to flat
+        if flat_cost - two_cost > 1e-9 * flat_cost:
+            return Topology.two_level(self.hosts, alpha=self.alpha)
+        return None
+
+
+def resolve_topology(topology, q: int, k: int) -> "Topology | None":
+    """Entry-point canonicalization: :class:`AutoTopology` markers
+    resolve to their cost-model pick; concrete topologies normalize
+    (flat collapses to None)."""
+    if isinstance(topology, AutoTopology):
+        return topology.resolve(q, k)
+    return _normalize_topology(topology)
+
+
+def surviving_topology(hosts_left: int, k: int,
+                       alpha: float = 4.0) -> "Topology | None":
+    """Topology to re-lower onto after whole-host loss (DESIGN.md
+    §17): two-level over the remaining hosts when that still aligns
+    parallel classes to host blocks (``hosts_left >= 2`` and
+    ``hosts_left | k``), else flat (``None``) — the bitwise fallback.
+    Schedule VALUES are topology-independent, so recovery output is
+    bitwise-identical to the healthy lowering either way."""
+    if hosts_left < 1:
+        raise ValueError("need at least one surviving host, got "
+                         f"{hosts_left}")
+    if hosts_left >= 2 and k % hosts_left == 0:
+        return Topology.two_level(hosts_left, alpha=alpha)
+    return None
 
 
 def _normalize_topology(topology) -> "Topology | None":
@@ -296,17 +374,22 @@ class HostTables:
     crossings:
 
     * **Phase A** is the flat per-round exchange with every delivery
-      that is not the FIRST copy of its packet to reach a host masked
-      out of the send tables (``-1`` -> zero block / dead lane). The
-      first receiver in round order on each remote host is that host's
-      *gateway* for the packet; same-host deliveries are never masked.
+      that is not its packet's GATEWAY copy to a host masked out of
+      the send tables (``-1`` -> zero block / dead lane). The gateway
+      on each remote host defaults to the first receiver there in
+      round order; a ``gateway_avoid`` preference (straggler-aware
+      failover, DESIGN.md §17) re-homes it to the first NON-avoided
+      receiver instead — same-host deliveries are never masked.
     * **Phase B** relays the masked copies over the fast edge: for
       round ``r`` and intra-host shift ``delta``, a single ppermute
       moves, from each gateway, the packet it received in its own
-      (strictly earlier) primary round ``r0`` to the non-gateway
-      receiver — filling exactly the recv slot the flat exchange would
-      have filled. After A+B the receive buffer is WORD-IDENTICAL to
-      the flat one, so decode and outputs stay bitwise equal.
+      primary round ``r0`` to the non-gateway receiver — filling
+      exactly the recv slot the flat exchange would have filled.
+      Phase B gathers from the COMPLETED phase-A buffer, so ``r0``
+      may lie before or after the relay round ``r`` (an avoided
+      early receiver relays from a later gateway legally). After A+B
+      the receive buffer is WORD-IDENTICAL to the flat one, so decode
+      and outputs stay bitwise equal for EVERY gateway assignment.
 
     Packet counts: per (group row, sender) the flat schedule crosses
     hosts ``k - c`` times (``c = k/hosts`` classes per host) and the
@@ -326,9 +409,11 @@ class HostTables:
     b_mask: np.ndarray            # [k-1, K, n] round-r slot phase-B fed
     b_perms: tuple                # [nd][K] (src, dst) intra-host cyclic
     b_live: tuple                 # [k-1] delta indices with traffic that
-    #                               round (round 1 is always empty: a
-    #                               gateway needs a strictly earlier
-    #                               round, so no relay can exist yet)
+    #                               round (under the DEFAULT gateway
+    #                               choice round 1 is always empty: the
+    #                               first-in-round-order gateway leaves
+    #                               nothing earlier to relay; an avoid
+    #                               preference may relay in any round)
     Rb: int                       # relay rows per (round, shift, sender)
     # modeled per-edge delivery counts (packets; DESIGN.md §16)
     flat_inter: int               # cross-host deliveries, flat schedule
@@ -338,10 +423,19 @@ class HostTables:
 
 
 def _lower_host_tables(T: StageTables, rows, groups, q, k, K,
-                       hosts) -> HostTables:
+                       hosts, avoid=frozenset()) -> HostTables:
     """Build the two-level overlay of one coded stage (see
     :class:`HostTables`). Pure numpy at lowering time, like
-    :func:`_lower_stage`."""
+    :func:`_lower_stage`.
+
+    ``avoid`` is the gateway preference (DESIGN.md §17): devices a
+    straggler-aware caller wants routed AROUND as phase-A gateways.
+    Per (sender, remote host) the gateway is the first receiver there
+    in round order that is not avoided; when every receiver on the
+    host is avoided, the plain round-order first is kept (the packet
+    must land somewhere). ``avoid=frozenset()`` reproduces the default
+    tables byte-for-byte.
+    """
     dph = K // hosts
     c = k // hosts                      # classes per host
     n = len(rows)
@@ -356,7 +450,7 @@ def _lower_host_tables(T: StageTables, rows, groups, q, k, K,
         G = [int(x) for x in groups[g]]
         for pm, m in enumerate(G):
             hm = m // dph
-            seen = {}                   # remote host -> (r0, gateway)
+            remote = {}                 # remote host -> [(r, w)] rnd order
             for r in range(1, k):
                 w = G[(pm + r) % k]
                 hw = w // dph
@@ -364,22 +458,26 @@ def _lower_host_tables(T: StageTables, rows, groups, q, k, K,
                     intra += 1
                     continue            # same-host: always primary
                 flat_inter += 1
-                if hw not in seen:
-                    seen[hw] = (r, w)   # first copy -> gateway, keep
-                    two_inter += 1
-                    continue
-                r0, gw = seen[hw]
-                relay += 1
-                # demote (li, r, m -> w) from phase A ...
-                sl = a2a_send[r - 1, m, w]
-                sl[int(np.flatnonzero(sl == li)[0])] = -1
-                dpp = ((w % q) - (m % q)) % q
-                sl = pp_send[r - 1, dpp, m]
-                sl[int(np.flatnonzero(sl == li)[0])] = -1
-                # ... and relay it intra-host from the gateway
-                b_mask[r - 1, w, li] = True
-                delta = (w - gw) % dph
-                moves.setdefault((r, delta, gw), []).append((li, r0, w))
+                remote.setdefault(hw, []).append((r, w))
+            for rws in remote.values():
+                r0, gw = next(((r, w) for r, w in rws
+                               if w not in avoid), rws[0])
+                two_inter += 1          # the gateway copy stays primary
+                for r, w in rws:
+                    if w == gw:
+                        continue
+                    relay += 1
+                    # demote (li, r, m -> w) from phase A ...
+                    sl = a2a_send[r - 1, m, w]
+                    sl[int(np.flatnonzero(sl == li)[0])] = -1
+                    dpp = ((w % q) - (m % q)) % q
+                    sl = pp_send[r - 1, dpp, m]
+                    sl[int(np.flatnonzero(sl == li)[0])] = -1
+                    # ... and relay it intra-host from the gateway
+                    b_mask[r - 1, w, li] = True
+                    delta = (w - gw) % dph
+                    moves.setdefault((r, delta, gw), []).append(
+                        (li, r0, w))
 
     # uniform-count sanity: one member per class, c classes per host
     assert flat_inter == n * k * (k - c)
@@ -472,6 +570,10 @@ class ShuffleProgram:
     topology: Topology | None = None
     hx1: HostTables | None = field(repr=False, default=None)
     hx2: HostTables | None = field(repr=False, default=None)
+    # gateway failover preference the host tables were lowered with
+    # (empty == default first-in-round-order gateways; flat-only
+    # programs always carry the empty set)
+    gateway_avoid: frozenset = frozenset()
 
     # ------------------------------------------------------------------ #
     @property
@@ -554,7 +656,9 @@ class ShuffleProgram:
 def lower_program(placement: Placement, Q: int | None = None,
                   d: int | None = None, *,
                   device_tables: bool = True,
-                  topology: Topology | None = None) -> ShuffleProgram:
+                  topology: Topology | None = None,
+                  gateway_avoid: frozenset = frozenset()
+                  ) -> ShuffleProgram:
     """Lower ``(Placement, Q, d)`` into a :class:`ShuffleProgram`.
 
     ``d`` (SPMD function-shard width, elements) is only required for the
@@ -565,8 +669,15 @@ def lower_program(placement: Placement, Q: int | None = None,
     exactly the schedules every prior PR emitted (the identity case); a
     two-level topology additionally lowers the host-aware relay overlay
     (:class:`HostTables`) that deduplicates inter-host packet copies.
+    An :class:`AutoTopology` marker resolves via the cost model first.
     The VALUES computed are identical either way — topology only
     changes which edge each packet rides.
+
+    ``gateway_avoid`` (two-level only) re-homes phase-A gateways away
+    from the named devices (straggler failover, DESIGN.md §17); the
+    empty set is the default first-in-round-order assignment, byte-
+    identical to every pre-§17 lowering. Outputs stay bitwise equal to
+    flat for every assignment.
     """
     design = placement.design
     q, k, K, J = design.q, design.k, design.K, design.J
@@ -576,9 +687,15 @@ def lower_program(placement: Placement, Q: int | None = None,
     if d is not None and d % (k - 1):
         raise ValueError(f"shard width d={d} must be divisible by "
                          f"k-1={k - 1}")
-    topology = _normalize_topology(topology)
+    topology = resolve_topology(topology, q, k)
     if topology is not None:
         topology.check(q, k)
+    gateway_avoid = frozenset(int(x) for x in (gateway_avoid or ()))
+    if topology is None:
+        gateway_avoid = frozenset()      # flat has no gateways to move
+    elif not all(0 <= x < K for x in gateway_avoid):
+        raise ValueError(f"gateway_avoid {sorted(gateway_avoid)} has "
+                         f"devices outside [0, {K})")
 
     n_groups = q ** k
     group_vals = np.zeros((n_groups, k), dtype=np.int32)
@@ -697,7 +814,7 @@ def lower_program(placement: Placement, Q: int | None = None,
         s3_job=s3_job, s3_recv=s3_recv, s3_send=s3_send,
         s3_batches=s3_batches, s3_perms=tuple(s3_perms),
         is_own=is_own, own_slot=own_slot, s2_ord=s2_ord, s3_off=s3_off,
-        d=d, topology=topology,
+        d=d, topology=topology, gateway_avoid=gateway_avoid,
     )
     if not device_tables:
         return ShuffleProgram(**prog)
@@ -709,9 +826,9 @@ def lower_program(placement: Placement, Q: int | None = None,
     hx1 = hx2 = None
     if topology is not None:
         hx1 = _lower_host_tables(s1, s1_rows, groups, q, k, K,
-                                 topology.hosts)
+                                 topology.hosts, avoid=gateway_avoid)
         hx2 = _lower_host_tables(s2, s2_rows, groups, q, k, K,
-                                 topology.hosts)
+                                 topology.hosts, avoid=gateway_avoid)
     return ShuffleProgram(s1=s1, s2=s2, hx1=hx1, hx2=hx2, **prog)
 
 
@@ -966,11 +1083,14 @@ def _program_key(program: ShuffleProgram) -> tuple:
     The topology (with its cost parameters) IS present: flat and
     two-level lowerings of the same ``(q, k, gamma, Q)`` must never
     alias (flat collapses to ``None``, keeping every pre-topology key
-    byte-identical)."""
+    byte-identical). A non-default gateway assignment extends the key
+    (the default/flat key shape stays byte-identical to pre-§17)."""
     topo = None if program.topology is None else program.topology.key()
-    return (program.q, program.k, program.placement.gamma,
+    base = (program.q, program.k, program.placement.gamma,
             _normalize_label_perm(program.placement.label_perm, program.k),
             program.Q, program.s1 is not None, topo)
+    gw = tuple(sorted(program.gateway_avoid))
+    return base + (gw,) if gw else base
 
 
 class ScheduleCache:
@@ -1045,23 +1165,32 @@ class ScheduleCache:
     def program(self, q: int, k: int, *, gamma: int = 1,
                 Q: int | None = None, d: int | None = None,
                 label_perm=None, device_tables: bool = True,
-                topology: Topology | None = None) -> ShuffleProgram:
+                topology: Topology | None = None,
+                gateway_avoid: frozenset = frozenset()
+                ) -> ShuffleProgram:
         """The lowered program of one configuration (lowering on miss).
 
         ``topology`` is part of the structural key (flat normalizes to
         ``None``, so flat lookups hit exactly the pre-topology
-        entries); flat and two-level lowerings of the same
+        entries; an :class:`AutoTopology` marker resolves via the cost
+        model first); flat and two-level lowerings of the same
         ``(q, k, gamma, Q)`` occupy distinct entries and never
-        cross-hit."""
+        cross-hit. ``gateway_avoid`` joins the key the same way: the
+        default empty assignment keys as ``None``, so every
+        non-default gateway failover lowering is its own entry."""
         label_perm = _normalize_label_perm(label_perm, k)
         Q = q * k if Q is None else Q   # lower_program's own default
         if d is not None and d % (k - 1):
             raise ValueError(f"shard width d={d} must be divisible by "
                              f"k-1={k - 1}")
-        topology = _normalize_topology(topology)
+        topology = resolve_topology(topology, q, k)
+        gateway_avoid = frozenset(int(x) for x in (gateway_avoid or ()))
+        if topology is None:
+            gateway_avoid = frozenset()
         topo_key = None if topology is None else topology.key()
+        gw_key = tuple(sorted(gateway_avoid)) or None
         base_key = (q, k, gamma, label_perm, Q, device_tables, topo_key,
-                    None)
+                    gw_key, None)
         with self._lock:
             base = self._get(self._programs, base_key)
             if base is None:
@@ -1073,7 +1202,7 @@ class ScheduleCache:
                 # surviving this cache's eviction/clear()
                 base = lower_program.__wrapped__(
                     pl, Q=Q, d=None, device_tables=device_tables,
-                    topology=topology)
+                    topology=topology, gateway_avoid=gateway_avoid)
                 self._put(self._programs, base_key, base)
             if d is None:
                 return base
@@ -1119,6 +1248,42 @@ class ScheduleCache:
                 except ValueError:
                     continue
                 warmed += 1
+        return warmed
+
+    def warm_host_survivors(self, program: ShuffleProgram,
+                            max_host_failures: int = 1) -> int:
+        """Pre-lower ``program`` under every surviving-host topology
+        reachable by losing up to ``max_host_failures`` whole hosts
+        (DESIGN.md §17) — the host-granularity sibling of
+        :meth:`warm_survivors`. Host-loss recovery is a TOPOLOGY
+        re-homing (the schedule values never change, only which edge
+        each packet rides), and the lowering depends only on the
+        surviving host COUNT, so one entry per loss count covers every
+        subset of that size. After this, ``kill_host`` recovery is a
+        pure cache hit: zero cold lowerings on the critical path.
+        Returns the number of surviving-topology programs warmed.
+        """
+        topo = program.topology
+        if topo is None:
+            raise ValueError(
+                "warm_host_survivors needs a program lowered for a "
+                "two-level topology (a flat lowering has no host "
+                "blocks to lose)")
+        if not 0 < max_host_failures < topo.hosts:
+            raise ValueError(
+                f"max_host_failures={max_host_failures} must leave at "
+                f"least one of {topo.hosts} hosts alive")
+        warmed = 0
+        for lost in range(1, max_host_failures + 1):
+            t = surviving_topology(topo.hosts - lost, program.k,
+                                   alpha=topo.alpha)
+            self.program(
+                program.q, program.k, gamma=program.placement.gamma,
+                Q=program.Q, d=program.d,
+                label_perm=program.placement.label_perm,
+                device_tables=program.s1 is not None, topology=t,
+                gateway_avoid=program.gateway_avoid)
+            warmed += 1
         return warmed
 
 

@@ -209,14 +209,17 @@ def main():
                     help="XOR codec lane (DESIGN.md §10): fused "
                          "single-pass gather kernels vs the multipass "
                          "oracle")
-    ap.add_argument("--topology", choices=("flat", "two-level"),
+    ap.add_argument("--topology", choices=("flat", "two-level", "auto"),
                     default="flat",
                     help="lowering topology (DESIGN.md §16): two-level "
                          "adds the host-aware gateway/relay schedule "
-                         "and per-edge load columns")
+                         "and per-edge load columns; auto picks "
+                         "flat vs two-level from the alpha cost model "
+                         "(camr_load_hierarchical vs camr_load_p2p, "
+                         "DESIGN.md §17)")
     ap.add_argument("--hosts", type=int, default=2, metavar="N",
-                    help="with --topology two-level: host count "
-                         "(must divide k; default 2)")
+                    help="with --topology two-level/auto: host count "
+                         "(two-level needs hosts | k; default 2)")
     ap.add_argument("--alpha", type=float, default=4.0, metavar="X",
                     help="modeled inter-host cost per byte relative to "
                          "intra-host (default 4.0)")
@@ -231,6 +234,24 @@ def main():
             topology.check(args.q, args.k)
         except ValueError as e:
             ap.error(str(e))
+    elif args.topology == "auto":
+        topology = Topology.auto(args.hosts, alpha=args.alpha).resolve(
+            args.q, args.k)
+        pick = "flat" if topology is None else \
+            f"two-level(hosts={topology.hosts})"
+        if args.hosts < 2 or args.k % args.hosts:
+            why = (f"hosts={args.hosts} does not give class-aligned "
+                   f"blocks for k={args.k}")
+        else:
+            intra_f, inter_f = camr_edge_loads(args.q, args.k,
+                                               args.hosts,
+                                               schedule="flat")
+            flat_cost = intra_f + args.alpha * inter_f
+            two_cost = camr_load_hierarchical(args.q, args.k,
+                                              args.hosts, args.alpha)
+            why = (f"alpha={args.alpha:g}: L_flat={flat_cost:.3f} vs "
+                   f"L_two_level={two_cost:.3f}")
+        print(f"auto-topology: picked {pick}  [{why}]")
     res = lower_schedules(args.q, args.k, args.d, codec=args.codec,
                           topology=topology)
     print(json.dumps(res, indent=1, default=str))

@@ -21,7 +21,8 @@ from repro.compat import make_mesh
 from repro.core.schedule import Topology
 
 __all__ = ["make_production_mesh", "data_axes", "mesh_devices",
-           "init_distributed", "make_camr_mesh", "detect_topology"]
+           "init_distributed", "make_camr_mesh", "detect_topology",
+           "host_membership"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -110,3 +111,19 @@ def detect_topology(k: int, *, alpha: float = 4.0) -> Topology:
     if hosts > 1 and k % hosts == 0:
         return Topology.two_level(hosts, alpha=alpha)
     return Topology.flat()
+
+
+def host_membership(q: int, k: int, *, alpha: float = 4.0,
+                    max_failed_hosts: int | None = None):
+    """The launch-time fault-domain tracker for this process layout
+    (DESIGN.md §17), or ``None`` when the layout is flat (no host
+    blocks to lose). Feed ``kill_host``/``current_topology`` into
+    ``ShuffleStream.set_topology`` on the recovery path; pre-pay the
+    survivor lowerings with ``ShuffleStream.warm_host_survivors``.
+    """
+    from repro.runtime.fault import HostMembership
+    topo = detect_topology(k, alpha=alpha)
+    if topo.is_flat:
+        return None
+    return HostMembership(q, k, topo,
+                          max_failed_hosts=max_failed_hosts)

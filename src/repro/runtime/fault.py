@@ -34,15 +34,19 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from functools import lru_cache
+
 from repro.core.designs import factorize_cluster, make_design
 from repro.core.engine import CAMRConfig, CAMREngine
 from repro.core.placement import make_placement
-from repro.core.schedule import SCHEDULE_CACHE, DegradedProgram
+from repro.core.schedule import (SCHEDULE_CACHE, DegradedProgram,
+                                 resolve_topology, surviving_topology)
 from repro.core.shuffle import Transmission
 
 __all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport",
-           "MembershipError", "StragglerPolicy", "Membership",
-           "ElasticController", "retarget_engine",
+           "MembershipError", "WireCorruptionError", "StragglerPolicy",
+           "Membership", "HostMembership", "ElasticController",
+           "retarget_engine", "smallest_unrecoverable_set",
            "degraded_shuffle_host", "degraded_dense_plan",
            "build_degraded_executor"]
 
@@ -50,6 +54,50 @@ __all__ = ["DegradedCAMREngine", "elastic_replan", "ReplanReport",
 class MembershipError(RuntimeError):
     """Invalid membership transition, or a degraded engine whose failed
     set was mutated after its survivor-set lowering was fixed."""
+
+
+class WireCorruptionError(RuntimeError):
+    """A coded wire packet failed its checksum after decode and the
+    bounded bitwise replay could not produce a clean wave (DESIGN.md
+    §17). Raised INSTEAD of returning silently mis-reduced values —
+    the integrity lane's whole contract."""
+
+
+@lru_cache(maxsize=32)
+def _design_placement(q: int, k: int, gamma: int):
+    design = make_design(q, k)
+    return design, make_placement(design, gamma)
+
+
+def smallest_unrecoverable_set(q: int, k: int, failed,
+                               gamma: int = 1):
+    """Smallest subset of ``failed`` that is by itself unrecoverable
+    by the degraded shuffle, or ``None`` when ``failed`` is
+    recoverable (the exact conditions
+    :func:`repro.core.schedule.lower_degraded` rejects on).
+
+    Checked smallest-first, so the returned tuple is a MINIMAL witness
+    the operator can act on: a single worker when ``k < 3`` (no
+    redundancy to recover from), a same-parallel-class pair (map
+    recompute required), or a batch's full ``k-1`` holder set (data
+    loss).
+    """
+    failed = frozenset(int(s) for s in failed)
+    if not failed:
+        return None
+    design, pl = _design_placement(q, k, gamma)
+    if k < 3:
+        return (min(failed),)
+    for i in range(k):
+        cls = sorted(set(design.parallel_class(i)) & failed)
+        if len(cls) > 1:
+            return tuple(cls[:2])
+    for j in range(design.J):
+        for t in range(k):
+            holders = frozenset(pl.holders(j, t))
+            if holders <= failed:
+                return tuple(sorted(holders))
+    return None
 
 
 class DegradedCAMREngine(CAMREngine):
@@ -278,15 +326,26 @@ class Membership:
     (``mu_target = (k-1)/K``), so the replan receipt proves
     ``moved_fraction == 0`` — no subfile moves and nothing re-encodes;
     the rejoined worker's stored batches are simply valid again.
+
+    With a two-level ``topology`` the ``max_failed`` cap counts FAULT
+    DOMAINS (class-major host blocks), not individual workers: two
+    dead workers on ONE host are one correlated event and consume one
+    slot (DESIGN.md §17). Either way a kill/demote that would make the
+    failed set shuffle-unrecoverable is rejected up front with the
+    smallest unrecoverable witness named — the stream never reaches
+    ``lower_degraded`` with a doomed survivor set.
     """
 
     LIVE, STRAGGLER, DEAD = "live", "straggler", "dead"
 
     def __init__(self, q: int, k: int, *, gamma: int = 1,
-                 policy: StragglerPolicy | None = None):
+                 policy: StragglerPolicy | None = None, topology=None):
         self.q, self.k, self.gamma = q, k, gamma
         self.K = q * k
         self.policy = policy or StragglerPolicy()
+        self.topology = resolve_topology(topology, q, k)
+        self._dph = (self.K // self.topology.hosts
+                     if self.topology is not None else None)
         self.state = [self.LIVE] * self.K
         self.strikes = [0] * self.K
         self.generation = 0
@@ -302,6 +361,20 @@ class Membership:
         return frozenset(s for s in range(self.K)
                          if self.state[s] != self.DEAD)
 
+    def domains(self, workers) -> frozenset:
+        """Correlated fault domains covering ``workers``: host ids
+        under a two-level topology, the workers themselves when flat
+        (every worker its own domain — the pre-§17 accounting)."""
+        if self.topology is None:
+            return frozenset(workers)
+        return frozenset(int(w) // self._dph for w in workers)
+
+    def gateway_avoid(self) -> frozenset:
+        """Devices a straggler-aware lowering should not elect as
+        phase-A gateways: everything not fully ``live`` right now."""
+        return frozenset(s for s in range(self.K)
+                         if self.state[s] != self.LIVE)
+
     def _check_worker(self, w: int) -> None:
         if not 0 <= w < self.K:
             raise MembershipError(f"worker {w} outside cluster "
@@ -311,28 +384,54 @@ class Membership:
         self.generation += 1
         self.events.append((self.generation, kind, worker))
 
+    def _vet_kill(self, w: int) -> str | None:
+        """Reason the live/straggler worker ``w`` must not die now, or
+        ``None`` when the kill is admissible. Shared by :meth:`kill`
+        (raises) and :meth:`demote` (declines quietly)."""
+        would = self.failed() | {w}
+        if len(self.domains(would)) > self.policy.max_failed:
+            unit = ("fault domains (class-major host blocks)"
+                    if self.topology is not None else "failures")
+            bad = smallest_unrecoverable_set(self.q, self.k, would,
+                                             self.gamma)
+            hint = (f"; smallest unrecoverable set: workers {list(bad)}"
+                    if bad is not None else "")
+            return (f"killing worker {w} would exceed "
+                    f"max_failed={self.policy.max_failed} concurrent "
+                    f"{unit} (dead: {sorted(self.failed())}, domains: "
+                    f"{sorted(self.domains(would))}){hint}")
+        bad = smallest_unrecoverable_set(self.q, self.k, would,
+                                         self.gamma)
+        if bad is not None:
+            return (f"killing worker {w} would make the dead set "
+                    f"{sorted(would)} shuffle-unrecoverable — smallest "
+                    f"unrecoverable set: workers {list(bad)} "
+                    "(same parallel class, a wiped holder set, or "
+                    "k < 3); recover at host granularity instead "
+                    "(HostMembership re-lowers the topology)")
+        return None
+
     # -- transitions ----------------------------------------------------- #
     def kill(self, w: int) -> None:
         """live/straggler -> dead (crash or operator drain)."""
         self._check_worker(w)
         if self.state[w] == self.DEAD:
             raise MembershipError(f"worker {w} is already dead")
-        if len(self.failed()) >= self.policy.max_failed:
-            raise MembershipError(
-                f"killing worker {w} would exceed "
-                f"max_failed={self.policy.max_failed} concurrent "
-                f"failures (dead: {sorted(self.failed())})")
+        veto = self._vet_kill(w)
+        if veto is not None:
+            raise MembershipError(veto)
         self.state[w] = self.DEAD
         self.strikes[w] = 0
         self._record("kill", w)
 
     def demote(self, w: int) -> bool:
-        """straggler -> dead, respecting the ``max_failed`` cap.
+        """straggler -> dead, respecting the ``max_failed`` cap (and
+        never into an unrecoverable set — slow data beats no data).
         Returns whether the demote actually happened."""
         self._check_worker(w)
         if self.state[w] == self.DEAD:
             raise MembershipError(f"worker {w} is already dead")
-        if len(self.failed()) >= self.policy.max_failed:
+        if self._vet_kill(w) is not None:
             return False
         self.state[w] = self.DEAD
         self.strikes[w] = 0
@@ -391,6 +490,122 @@ class Membership:
                     self.state[w] = self.LIVE
                     self._record("clear", w)
         return demoted
+
+
+class HostMembership:
+    """Host-granularity fault domains over a two-level topology
+    (DESIGN.md §17).
+
+    Whole-host loss is NEVER absorbable by the survivor-set degraded
+    shuffle: each class-major host block holds ``k/hosts`` COMPLETE
+    parallel classes, so any single dead host already trips
+    ``lower_degraded``'s one-per-class check. Recovery is therefore a
+    TOPOLOGY re-homing, not a degradation — :meth:`kill_host`
+    atomically fails the block (one correlated event) and
+    :meth:`current_topology` names the surviving-host lowering target:
+    ``two_level`` over the remaining hosts while ``hosts_left | k``
+    still holds, else ``None`` (the bitwise-identical flat fallback).
+    Schedule values are topology-independent, so the re-homed stream
+    stays bitwise-equal to the healthy oracle; pre-pay every
+    survivor lowering with ``ScheduleCache.warm_host_survivors`` and
+    the swap is a pure cache hit.
+    """
+
+    LIVE, DEAD = "live", "dead"
+
+    def __init__(self, q: int, k: int, topology, *,
+                 max_failed_hosts: int | None = None):
+        topology = resolve_topology(topology, q, k)
+        if topology is None:
+            raise MembershipError(
+                "HostMembership needs a two-level topology (flat "
+                "clusters have no host fault domains — use Membership)")
+        topology.check(q, k)
+        self.q, self.k, self.K = q, k, q * k
+        self.topology = topology
+        self.hosts = topology.hosts
+        self.dph = self.K // self.hosts
+        cap = self.hosts - 1 if max_failed_hosts is None \
+            else int(max_failed_hosts)
+        if not 0 < cap < self.hosts:
+            raise MembershipError(
+                f"max_failed_hosts={max_failed_hosts} outside "
+                f"[1, {self.hosts - 1}] for {self.hosts} hosts")
+        self.max_failed_hosts = cap
+        self.state = [self.LIVE] * self.hosts
+        self.generation = 0
+        self.events: list[tuple] = []    # (generation, kind, host)
+
+    # -- queries --------------------------------------------------------- #
+    def failed_hosts(self) -> frozenset:
+        return frozenset(h for h in range(self.hosts)
+                         if self.state[h] == self.DEAD)
+
+    def live_hosts(self) -> frozenset:
+        return frozenset(h for h in range(self.hosts)
+                         if self.state[h] == self.LIVE)
+
+    def host_block(self, h: int) -> tuple:
+        """The class-major device block host ``h`` owns."""
+        self._check_host(h)
+        return tuple(range(h * self.dph, (h + 1) * self.dph))
+
+    def failed_workers(self) -> frozenset:
+        """Every device on a dead host — the correlated loss set."""
+        return frozenset(w for h in self.failed_hosts()
+                         for w in self.host_block(h))
+
+    def current_topology(self):
+        """Lowering target for the surviving hosts: ``two_level`` when
+        the block structure still divides ``k``, else ``None``
+        (flat)."""
+        return surviving_topology(len(self.live_hosts()), self.k,
+                                  alpha=self.topology.alpha)
+
+    def _check_host(self, h: int) -> None:
+        if not 0 <= h < self.hosts:
+            raise MembershipError(f"host {h} outside cluster "
+                                  f"[0, {self.hosts})")
+
+    def _record(self, kind: str, host: int) -> None:
+        self.generation += 1
+        self.events.append((self.generation, kind, host))
+
+    # -- transitions ----------------------------------------------------- #
+    def kill_host(self, h: int) -> tuple:
+        """Atomically fail host ``h``'s whole block (ONE correlated
+        event against ``max_failed_hosts``); returns the dead device
+        block so the caller can drain in-flight work."""
+        self._check_host(h)
+        if self.state[h] == self.DEAD:
+            raise MembershipError(f"host {h} is already dead")
+        would = sorted(self.failed_hosts() | {h})
+        if len(would) >= self.hosts:
+            lost = sorted(w for hh in would for w in self.host_block(hh))
+            raise MembershipError(
+                f"killing host {h} would fail every host {would} — "
+                f"smallest unrecoverable set: the full host set owning "
+                f"workers {lost}; no surviving host remains to re-home "
+                "the shuffle onto")
+        if len(would) > self.max_failed_hosts:
+            raise MembershipError(
+                f"killing host {h} would exceed "
+                f"max_failed_hosts={self.max_failed_hosts} concurrent "
+                f"host fault domains (dead hosts: "
+                f"{sorted(self.failed_hosts())})")
+        self.state[h] = self.DEAD
+        self._record("kill_host", h)
+        return self.host_block(h)
+
+    def rejoin_host(self, h: int) -> None:
+        """dead -> live; the next :meth:`current_topology` re-homes
+        back onto the larger host set (pure cache hit when warmed)."""
+        self._check_host(h)
+        if self.state[h] != self.DEAD:
+            raise MembershipError(
+                f"host {h} is {self.state[h]}; only dead hosts rejoin")
+        self.state[h] = self.LIVE
+        self._record("rejoin_host", h)
 
 
 class ElasticController:

@@ -41,13 +41,15 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.engine import CAMRConfig, CAMREngine
-from repro.runtime.fault import (ElasticController, Membership,
-                                 StragglerPolicy)
+from repro.runtime.fault import (ElasticController, HostMembership,
+                                 Membership, StragglerPolicy)
 from repro.runtime.jobstream import JobSpec, JobStream
 from repro.runtime.serve import ServeStream, WaveCrashError
 
-__all__ = ["Kill", "Rejoin", "Straggle", "FaultPlan", "ChaosController",
+__all__ = ["Kill", "Rejoin", "Straggle", "KillHost", "RejoinHost",
+           "CorruptPacket", "FaultPlan", "ChaosController",
            "make_specs", "serial_oracle", "run_plan",
+           "make_shuffle_waves", "run_host_plan",
            "assert_bit_identical", "WaveCrash", "SlotPoison",
            "WaveLatency", "ServeFaultPlan", "ServeChaosController",
            "run_serve_plan"]
@@ -83,6 +85,43 @@ class Straggle:
 
 
 @dataclass(frozen=True)
+class KillHost:
+    """Whole host ``host`` drops when wave ``wave`` starts — ONE
+    correlated fault domain (DESIGN.md §17): its entire class-major
+    device block dies at once, and the stream must re-home onto the
+    surviving-host topology (two-level while divisibility holds, else
+    flat) bitwise-identically."""
+
+    wave: int
+    host: int
+
+
+@dataclass(frozen=True)
+class RejoinHost:
+    """Dead host re-admitted when wave ``wave`` starts; the stream
+    re-homes back onto the larger host set (a warm cache hit)."""
+
+    wave: int
+    host: int
+
+
+@dataclass(frozen=True)
+class CorruptPacket:
+    """One coded wire word of ``device``'s stage-``stage`` Δ is
+    bit-flipped by ``bits`` in transit during wave ``wave`` — the
+    integrity lane must detect it via the packet checksum and replay
+    the wave bitwise, never silently mis-reduce. ``row=None`` targets
+    the device's first participating group row (guaranteed on-wire)."""
+
+    wave: int
+    stage: int = 1
+    device: int = 0
+    row: int | None = None
+    word: int = 0
+    bits: int = 1
+
+
+@dataclass(frozen=True)
 class FaultPlan:
     """A named, scripted churn schedule (a tuple of events)."""
 
@@ -90,7 +129,14 @@ class FaultPlan:
     name: str = ""
 
     def workers(self) -> frozenset:
-        return frozenset(ev.worker for ev in self.events)
+        return frozenset(w for w in (getattr(ev, "worker", None)
+                                     for ev in self.events)
+                         if w is not None)
+
+    def hosts(self) -> frozenset:
+        return frozenset(h for h in (getattr(ev, "host", None)
+                                     for ev in self.events)
+                         if h is not None)
 
 
 class ChaosController(ElasticController):
@@ -169,6 +215,87 @@ def run_plan(specs, plan: FaultPlan, *, policy=None, pipeline=False,
     stream = JobStream(elastic=ctrl, wave_batch=wave_batch,
                        pipeline=pipeline)
     return stream.run(specs), stream, ctrl
+
+
+def make_shuffle_waves(q: int, k: int, waves: int, d: int = 12,
+                       seed: int = 0, dtype=np.float32, mesh=None):
+    """Waves of SPMD shuffle contributions plus their healthy oracle:
+    ``(contribs [W][K, J_own, k-1, K, d], oracle [W][K, J, d])``.
+
+    With a ``mesh``, the oracle is the HEALTHY flat stream's outputs —
+    the bitwise anchor of §16/§17 (every topology, gateway assignment,
+    and recovery path must match it word-for-word), itself gated
+    allclose against the numpy reduction reference here so the anchor
+    is numerically grounded. Without a mesh, the numpy reference is
+    returned directly (allclose-grade only: the coded path reduces in
+    a different association order)."""
+    from repro.core.collective import (ShuffleStream,
+                                       camr_shuffle_reference, make_plan,
+                                       scatter_contributions)
+    plan = make_plan(q, k, d)
+    rng = np.random.default_rng(seed)
+    contribs, refs = [], []
+    for _ in range(waves):
+        bg = rng.standard_normal(
+            (plan.J, k, plan.K, d)).astype(np.float32).astype(dtype)
+        contribs.append(scatter_contributions(plan, bg))
+        refs.append(camr_shuffle_reference(plan, np.asarray(bg)))
+    if mesh is None:
+        return contribs, refs
+    oracle = ShuffleStream(q, k, d, mesh=mesh).run_waves(contribs)
+    rtol, atol = ((2e-5, 2e-6) if np.dtype(dtype) == np.float32
+                  else (6e-2, 1e-1))       # bf16 wire: ~8-bit mantissa
+    for got, ref in zip(oracle, refs):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=rtol, atol=atol)
+    return contribs, oracle
+
+
+def run_host_plan(q: int, k: int, d: int, contribs, plan: FaultPlan, *,
+                  mesh, hosts: int, verify_wire: bool = False,
+                  warm: bool = True, axis_name: str = "camr"):
+    """Run shuffle waves through a two-level :class:`ShuffleStream`
+    under a host-granularity ``plan`` (DESIGN.md §17).
+
+    ``KillHost``/``RejoinHost`` events drive a :class:`HostMembership`
+    and re-home the stream onto its ``current_topology()`` — two-level
+    over the survivors while divisibility holds, else the flat
+    fallback; ``CorruptPacket`` arms the stream's one-shot wire fault
+    (needs ``verify_wire=True``). Deterministic: faults fire exactly
+    when their wave is submitted, one wave per dispatch. Returns
+    ``(outputs, stream, host_membership)``.
+    """
+    from repro.core.collective import ShuffleStream
+    from repro.core.schedule import Topology
+
+    topo = Topology.two_level(hosts)
+    hm = HostMembership(q, k, topo)
+    stream = ShuffleStream(q, k, d, mesh=mesh, axis_name=axis_name,
+                           topology=topo, verify_wire=verify_wire)
+    if warm:
+        stream.warm_host_survivors(max_host_failures=hosts - 1)
+    applied: set = set()
+    outs = []
+    for w, contrib in enumerate(contribs):
+        for i, ev in enumerate(plan.events):
+            if i in applied or ev.wave != w:
+                continue
+            if isinstance(ev, KillHost):
+                hm.kill_host(ev.host)
+                stream.set_topology(hm.current_topology())
+                applied.add(i)
+            elif isinstance(ev, RejoinHost):
+                hm.rejoin_host(ev.host)
+                stream.set_topology(hm.current_topology())
+                applied.add(i)
+            elif isinstance(ev, CorruptPacket):
+                stream.inject_corruption(stage=ev.stage,
+                                         device=ev.device, row=ev.row,
+                                         word=ev.word, bits=ev.bits)
+                applied.add(i)
+        outs.extend(stream.run_waves([contrib]))
+    return outs, stream, hm
 
 
 def assert_bit_identical(oracle, got, context="") -> None:

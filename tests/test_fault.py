@@ -12,8 +12,11 @@ from repro.core.designs import make_design
 from repro.core.engine import CAMRConfig, CAMREngine
 from repro.core.placement import make_placement
 from repro.data.pipeline import ShardedTokenPipeline
-from repro.runtime.fault import (DegradedCAMREngine, MembershipError,
-                                 elastic_replan)
+from repro.core.schedule import Topology, surviving_topology
+from repro.runtime.fault import (DegradedCAMREngine, HostMembership,
+                                 Membership, MembershipError,
+                                 StragglerPolicy, elastic_replan,
+                                 smallest_unrecoverable_set)
 from repro.runtime.train_loop import MultiModelCAMRTrainer
 
 
@@ -187,6 +190,143 @@ def test_elastic_replan_invariants(q_old, k_old, q_new, k_new):
     assert r2.moved_fraction == 0.0            # idempotent
     M = make_placement(make_design(q_new, k_new), 1).placement_matrix()
     assert (M.sum(axis=0) == k_new - 1).all()  # every subfile owned
+
+
+# --------------------------------------------------------------------- #
+# fault domains (DESIGN.md §17): the recoverability oracle
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("q,k,sizes", [
+    (2, 3, (1, 2)), (3, 3, (1, 2)), (2, 4, (1, 2, 3)),
+])
+def test_smallest_unrecoverable_set_matches_engine(q, k, sizes):
+    """Exhaustive agreement over every failed set of the listed sizes:
+    the closed-form oracle rejects EXACTLY the sets the degraded
+    lowering rejects, and every witness it names is itself a minimal
+    unrecoverable subset of the probe."""
+    cfg = CAMRConfig(q=q, k=k, gamma=1)
+    Q = cfg.num_functions()
+    for size in sizes:
+        for combo in itertools.combinations(range(cfg.K), size):
+            failed = set(combo)
+            bad = smallest_unrecoverable_set(q, k, failed)
+            if bad is None:
+                DegradedCAMREngine(cfg, _linear_map(Q), failed=failed)
+            else:
+                assert set(bad) <= failed
+                # the witness is unrecoverable ON ITS OWN
+                assert smallest_unrecoverable_set(q, k, set(bad)) \
+                    is not None
+                with pytest.raises(ValueError):
+                    DegradedCAMREngine(cfg, _linear_map(Q),
+                                       failed=failed)
+
+
+def test_smallest_unrecoverable_set_edges():
+    assert smallest_unrecoverable_set(2, 4, set()) is None
+    # k < 3: no coded shuffle, any single failure is fatal
+    assert smallest_unrecoverable_set(2, 2, {3}) == (3,)
+    # same parallel class (class i owns devices [i*q, (i+1)*q))
+    assert smallest_unrecoverable_set(2, 4, {0, 1}) == (0, 1)
+    # cross-class singles are fine at k = 4
+    assert smallest_unrecoverable_set(2, 4, {0, 2}) is None
+
+
+def test_membership_counts_fault_domains_not_workers():
+    """One host = ONE correlated event: with a two-level topology the
+    ``max_failed`` cap counts class-major host blocks, so a second
+    same-host (cross-class) kill is admissible where the flat
+    accounting would already refuse it."""
+    topo = Topology.two_level(2)
+    m = Membership(2, 4, topology=topo,
+                   policy=StragglerPolicy(max_failed=1))
+    m.kill(0)                       # host 0, class 0
+    m.kill(2)                       # host 0, class 1: same domain
+    assert m.failed() == {0, 2}
+    assert m.domains(m.failed()) == {0}
+    assert m.gateway_avoid() == {0, 2}
+    # a SECOND domain trips the cap, and the message says so in
+    # fault-domain terms
+    with pytest.raises(MembershipError, match="max_failed") as ei:
+        m.kill(4)
+    assert "domains" in str(ei.value)
+    # an unrecoverable same-class kill is vetoed with the smallest
+    # witness, pointing at host-granularity recovery
+    with pytest.raises(MembershipError,
+                       match="shuffle-unrecoverable") as ei:
+        m.kill(1)
+    assert "[0, 1]" in str(ei.value)
+    assert "HostMembership" in str(ei.value)
+    # flat accounting: the same second kill exceeds max_failed=1
+    f = Membership(2, 4, policy=StragglerPolicy(max_failed=1))
+    f.kill(0)
+    assert f.domains(f.failed()) == {0}
+    with pytest.raises(MembershipError, match="max_failed"):
+        f.kill(2)
+
+
+@pytest.mark.parametrize("q,k,hosts", [
+    (2, 4, 2), (3, 4, 2), (2, 6, 2), (2, 6, 3), (2, 8, 4),
+])
+def test_host_membership_exhaustive_block_sets(q, k, hosts):
+    """Every proper subset of hosts is killable (in any order) under a
+    full-width cap, lands on the surviving-topology the closed form
+    names, and the lost block is ALWAYS worker-unrecoverable — whole
+    hosts can only be re-homed, never degraded around. Killing the
+    last host is rejected by name."""
+    K = q * k
+    dph = K // hosts
+    for r in range(1, hosts):
+        for combo in itertools.combinations(range(hosts), r):
+            hm = HostMembership(q, k, Topology.two_level(hosts),
+                                max_failed_hosts=hosts - 1)
+            for h in combo:
+                block = hm.kill_host(h)
+                assert block == tuple(range(h * dph, (h + 1) * dph))
+            assert hm.failed_hosts() == set(combo)
+            assert hm.failed_workers() == {
+                w for h in combo for w in hm.host_block(h)}
+            # a dead host block always wipes whole parallel classes
+            assert smallest_unrecoverable_set(
+                q, k, hm.failed_workers()) is not None
+            left = hosts - r
+            want = surviving_topology(left, k)
+            assert hm.current_topology() == want
+            if left >= 2 and k % left == 0:
+                assert want == Topology.two_level(left)
+            else:
+                assert want is None          # bitwise flat fallback
+    hm = HostMembership(q, k, Topology.two_level(hosts),
+                        max_failed_hosts=hosts - 1)
+    for h in range(hosts - 1):
+        hm.kill_host(h)
+    with pytest.raises(MembershipError, match="unrecoverable"):
+        hm.kill_host(hosts - 1)
+    # rejoin re-homes back up the very same ladder
+    hm.rejoin_host(0)
+    assert 0 in hm.live_hosts()
+    assert hm.current_topology() == surviving_topology(2, k)
+
+
+def test_host_membership_validation():
+    with pytest.raises(MembershipError, match="two-level"):
+        HostMembership(2, 4, None)
+    with pytest.raises(MembershipError, match="max_failed_hosts"):
+        HostMembership(2, 4, Topology.two_level(2), max_failed_hosts=2)
+    hm = HostMembership(2, 4, Topology.two_level(2))
+    assert hm.max_failed_hosts == 1
+    hm.kill_host(1)
+    with pytest.raises(MembershipError, match="already dead"):
+        hm.kill_host(1)
+    with pytest.raises(MembershipError, match="outside"):
+        hm.kill_host(5)
+    with pytest.raises(MembershipError, match="only dead"):
+        hm.rejoin_host(0)
+    # the cap counts host domains: a second host is one event too many
+    hm2 = HostMembership(2, 6, Topology.two_level(3),
+                         max_failed_hosts=1)
+    hm2.kill_host(0)
+    with pytest.raises(MembershipError, match="max_failed_hosts"):
+        hm2.kill_host(1)
 
 
 # --------------------------------------------------------------------- #

@@ -135,3 +135,80 @@ def test_elastic_replan_properties(old_qk, new_qk):
     assert r2.moved_fraction == 0.0
     M = make_placement(make_design(q_new, k_new), 1).placement_matrix()
     assert (M.sum(axis=0) == k_new - 1).all()
+
+
+# --------------------------------------------------------------------- #
+# fault domains (DESIGN.md §17): random kills never produce a wrong
+# answer — either a typed rejection or a recovery the schedule covers
+# --------------------------------------------------------------------- #
+_HOST_CONFIGS = [(2, 4, 2), (3, 4, 2), (2, 6, 2), (2, 6, 3)]
+
+
+@given(st.sampled_from(_HOST_CONFIGS),
+       st.lists(st.integers(0, 3), min_size=1, max_size=6))
+@settings(max_examples=40, deadline=None)
+def test_random_host_kills_recover_or_reject(cfg, kills):
+    """Any host-kill/rejoin walk either raises a typed MembershipError
+    or lands on a surviving topology whose lowering shares the flat
+    schedule VALUES bit-for-bit (so the re-homed stream is bitwise by
+    construction) — never a wrong answer, never a bare ValueError."""
+    from repro.core.collective import make_plan
+    from repro.core.schedule import Topology, surviving_topology
+    from repro.runtime.fault import (HostMembership, MembershipError,
+                                     smallest_unrecoverable_set)
+
+    q, k, hosts = cfg
+    hm = HostMembership(q, k, Topology.two_level(hosts),
+                        max_failed_hosts=hosts - 1)
+    flat = make_plan(q, k, 2 * (k - 1))
+    for h in kills:
+        try:
+            if h in hm.failed_hosts():
+                hm.rejoin_host(h)
+            else:
+                hm.kill_host(h % hosts if h >= hosts else h)
+        except MembershipError:
+            continue                    # typed rejection is a valid end
+        left = len(hm.live_hosts())
+        t = hm.current_topology()
+        assert t == surviving_topology(left, k)
+        if t is not None:
+            assert t.hosts == left and k % left == 0
+        plan = make_plan(q, k, 2 * (k - 1), topology=t)
+        for stage in (1, 2):
+            A = flat.program.stage_tables(stage)
+            B = plan.program.stage_tables(stage)
+            # topology moves packets between edges, never between rows:
+            # identical send/recv values ==> bitwise-identical outputs
+            np.testing.assert_array_equal(A.a2a_send, B.a2a_send)
+            np.testing.assert_array_equal(A.pp_send, B.pp_send)
+        if hm.failed_workers():
+            # dead blocks are never degradable around, only re-homed
+            assert smallest_unrecoverable_set(
+                q, k, hm.failed_workers()) is not None
+
+
+@given(st.sampled_from([(2, 4, 2), (2, 6, 2), (2, 6, 3)]),
+       st.lists(st.integers(0, 11), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_random_worker_kills_stay_recoverable(cfg, kills):
+    """Membership admits a kill ONLY into a state the degraded shuffle
+    can lower: every accepted sequence keeps the dead set recoverable
+    and inside the domain cap; every refusal is a typed
+    MembershipError (never a downstream ValueError)."""
+    from repro.core.schedule import Topology
+    from repro.runtime.fault import (Membership, MembershipError,
+                                     StragglerPolicy,
+                                     smallest_unrecoverable_set)
+
+    q, k, hosts = cfg
+    m = Membership(q, k, topology=Topology.two_level(hosts),
+                   policy=StragglerPolicy(max_failed=1))
+    for w in kills:
+        try:
+            m.kill(w % m.K)
+        except MembershipError:
+            continue
+        assert smallest_unrecoverable_set(q, k, m.failed()) is None
+        assert len(m.domains(m.failed())) <= m.policy.max_failed
+        assert m.gateway_avoid() >= m.failed()

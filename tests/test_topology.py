@@ -13,9 +13,12 @@ import pytest
 
 from repro.core.collective import (ShuffleStream, camr_edge_bytes,
                                    expected_collective_calls, make_plan)
-from repro.core.loads import camr_edge_loads, camr_load_hierarchical
-from repro.core.schedule import (SCHEDULE_CACHE, ScheduleCache, Topology,
-                                 _normalize_topology, _program_key)
+from repro.core.loads import (camr_edge_loads, camr_load_hierarchical,
+                              camr_load_p2p)
+from repro.core.schedule import (SCHEDULE_CACHE, AutoTopology,
+                                 ScheduleCache, Topology,
+                                 _normalize_topology, _program_key,
+                                 resolve_topology, surviving_topology)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -347,3 +350,212 @@ def test_two_level_rejects_looped_mode():
     with pytest.raises(ValueError):
         ShuffleStream(2, 4, 6, mesh=None, mode="looped",
                       topology=Topology.two_level(2))
+
+
+# --------------------------------------------------------------------- #
+# gateway failover (DESIGN.md §17): avoid-set lowering stays conservative
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("q,k,hosts", CONFIGS)
+def test_gateway_avoid_preserves_delivery_conservation(q, k, hosts):
+    """Every gateway assignment re-routes the SAME delivery set: the
+    per-edge conservation counts are invariant in the avoid set, only
+    the relay tables move."""
+    K = q * k
+    dph = K // hosts
+    base = make_plan(q, k, 2 * (k - 1), topology=Topology.two_level(hosts))
+    # avoid one device per host, a whole host block, and a mixed set
+    avoid_sets = [frozenset({h * dph for h in range(hosts)}),
+                  frozenset(range(dph)),
+                  frozenset({0, K - 1})]
+    for avoid in avoid_sets:
+        plan = make_plan(q, k, 2 * (k - 1),
+                         topology=Topology.two_level(hosts),
+                         gateway_avoid=avoid)
+        assert plan.program.gateway_avoid == avoid
+        moved = False
+        for stage in (1, 2):
+            B = base.program.host_tables(stage)
+            X = plan.program.host_tables(stage)
+            n = plan.program.stage_tables(stage).n
+            c = k // hosts
+            kept = int((X.a2a_send >= 0).sum())
+            assert kept + X.relay_intra == n * k * (k - 1)
+            assert int((X.pp_send >= 0).sum()) == kept
+            assert int(X.b_mask.sum()) == X.relay_intra
+            assert int((X.b_send >= 0).sum()) == X.relay_intra
+            assert X.flat_inter == n * k * (k - c)
+            assert X.two_level_inter == n * k * (hosts - 1)
+            assert X.intra == n * k * (c - 1)
+            for perm in X.b_perms:
+                for src, dst in perm:
+                    assert src // dph == dst // dph
+            moved = moved or not np.array_equal(X.a2a_send, B.a2a_send)
+        # a whole-host avoid set cannot move that host's gateways (the
+        # fallback keeps the first receiver), but cross-host sets must
+        if not any(set(range(h * dph, (h + 1) * dph)) <= avoid
+                   for h in range(hosts)):
+            assert moved, f"avoid={sorted(avoid)} left tables unchanged"
+
+
+def test_gateway_avoid_joins_cache_and_program_key():
+    """Gateway assignments never alias: default vs avoid-set lowerings
+    occupy distinct cache entries, and the default keeps the pre-§17
+    key shape."""
+    cache = ScheduleCache()
+    topo = Topology.two_level(2)
+    base = cache.program(2, 4, Q=8, d=6, topology=topo)
+    avoided = cache.program(2, 4, Q=8, d=6, topology=topo,
+                            gateway_avoid={0})
+    assert avoided is not base
+    assert cache.stats()["misses"] == 4 and cache.stats()["hits"] == 0
+    assert cache.program(2, 4, Q=8, d=6, topology=topo,
+                         gateway_avoid={0}) is avoided
+    assert cache.program(2, 4, Q=8, d=6, topology=topo) is base
+    # key shape: default lowerings (flat or two-level) keep their
+    # pre-gateway tuple; only non-empty avoid sets extend it
+    assert _program_key(base) == _program_key(avoided)[:-1]
+    assert _program_key(avoided)[-1] == (0,)
+    # flat collapses the avoid set (no gateways to move): same entry
+    flat = cache.program(2, 4, Q=8, d=6)
+    assert cache.program(2, 4, Q=8, d=6, gateway_avoid={0}) is flat
+
+
+def test_gateway_avoid_validation():
+    with pytest.raises(ValueError, match="outside"):
+        make_plan(2, 4, 6, topology=Topology.two_level(2),
+                  gateway_avoid={99})
+    with pytest.raises(ValueError, match="outside"):
+        ShuffleStream(2, 4, 6, mesh=None, gateway_avoid={-1})
+
+
+# --------------------------------------------------------------------- #
+# alpha-driven auto-pick (DESIGN.md §17 satellite)
+# --------------------------------------------------------------------- #
+def test_auto_topology_resolution():
+    auto = Topology.auto(2, alpha=4.0)
+    assert isinstance(auto, AutoTopology)
+    picked = auto.resolve(2, 4)
+    assert picked == Topology.two_level(2, alpha=4.0)
+    # alpha = 1: analytically equal costs — tie goes to flat
+    assert Topology.auto(2, alpha=1.0).resolve(2, 4) is None
+    # hosts = k: two-level degenerates to flat's inter traffic
+    assert Topology.auto(4, alpha=4.0).resolve(2, 4) is None
+    # non-dividing hosts: no class-aligned blocks, flat
+    assert Topology.auto(3, alpha=16.0).resolve(2, 4) is None
+    assert Topology.auto(1, alpha=16.0).resolve(2, 4) is None
+    # the pick is exactly the cost-model argmin
+    for hosts, alpha in [(2, 1.5), (2, 8.0), (3, 2.0), (3, 64.0)]:
+        got = Topology.auto(hosts, alpha=alpha).resolve(2, 6)
+        intra, inter = camr_edge_loads(2, 6, hosts, schedule="flat")
+        flat_cost = intra + alpha * inter
+        two_cost = camr_load_hierarchical(2, 6, hosts, alpha)
+        if flat_cost - two_cost > 1e-9 * flat_cost:
+            assert got == Topology.two_level(hosts, alpha=alpha)
+        else:
+            assert got is None
+    # identity: alpha = 1 prices both schedules at camr_load_p2p
+    assert camr_load_hierarchical(2, 6, 2, 1.0) == pytest.approx(
+        camr_load_p2p(2, 6))
+
+
+def test_auto_topology_resolves_through_cache_and_plan():
+    """An AutoTopology marker is transparent everywhere a Topology is
+    accepted — the cache keys the RESOLVED pick (no auto/concrete
+    aliasing)."""
+    cache = ScheduleCache()
+    two = cache.program(2, 4, Q=8, topology=Topology.two_level(2))
+    auto = cache.program(2, 4, Q=8, topology=Topology.auto(2, alpha=4.0))
+    assert auto is two                       # resolved to the same entry
+    flat = cache.program(2, 4, Q=8)
+    assert cache.program(2, 4, Q=8,
+                         topology=Topology.auto(2, alpha=1.0)) is flat
+    plan = make_plan(2, 4, 6, topology=Topology.auto(2, alpha=4.0))
+    assert plan.topology == Topology.two_level(2, alpha=4.0)
+    assert resolve_topology(Topology.auto(2, alpha=1.0), 2, 4) is None
+
+
+def test_surviving_topology():
+    assert surviving_topology(2, 4) == Topology.two_level(2)
+    assert surviving_topology(3, 4) is None          # 3 does not divide 4
+    assert surviving_topology(1, 4) is None          # single host: flat
+    assert surviving_topology(3, 6, alpha=8.0) == \
+        Topology.two_level(3, alpha=8.0)
+    with pytest.raises(ValueError):
+        surviving_topology(0, 4)
+
+
+def test_warm_host_survivors_prepays_every_host_loss():
+    """After warm_host_survivors, every surviving-host re-lowering of
+    up to max_host_failures losses is a pure cache hit."""
+    cache = ScheduleCache()
+    prog = cache.program(2, 6, Q=12, d=10, topology=Topology.two_level(3))
+    n = cache.warm_host_survivors(prog, max_host_failures=2)
+    assert n == 2                        # hosts 2 and 1 survivor layouts
+    before = cache.stats()
+    for lost in (1, 2):
+        t = surviving_topology(3 - lost, 6)
+        cache.program(2, 6, Q=12, d=10, topology=t)
+    st = cache.stats()
+    assert st["misses"] == before["misses"], "host recovery must be a " \
+        "pure cache hit after warm_host_survivors"
+    assert st["hits"] > before["hits"]
+    # flat stream has no hosts to lose
+    flat = cache.program(2, 6, Q=12, d=10)
+    with pytest.raises(ValueError):
+        cache.warm_host_survivors(flat)
+    with pytest.raises(ValueError):
+        cache.warm_host_survivors(prog, max_host_failures=3)
+
+
+# --------------------------------------------------------------------- #
+# SPMD executor: every gateway assignment bitwise == flat == oracle
+# --------------------------------------------------------------------- #
+_RUN_GATEWAY_SWEEP = textwrap.dedent("""
+    import numpy as np, jax
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.core.collective import (make_plan, camr_shuffle,
+        scatter_contributions)
+    from repro.core.schedule import Topology
+    q, k, hosts, d = {q}, {k}, {hosts}, {d}
+    plan_f = make_plan(q, k, d)
+    K = plan_f.K
+    dph = K // hosts
+    rng = np.random.default_rng(7)
+    bg = rng.standard_normal((plan_f.J, k, K, d)).astype(np.float32)
+    contribs = scatter_contributions(plan_f, bg)
+    mesh = make_mesh((K,), ('camr',))
+
+    def run(plan, router='all_to_all'):
+        fn = jax.jit(shard_map(
+            lambda c: camr_shuffle(plan, c[0], axis_name='camr',
+                                   router=router)[None],
+            mesh=mesh, in_specs=P('camr'), out_specs=P('camr')))
+        return np.asarray(jax.block_until_ready(fn(contribs)))
+
+    flat = run(plan_f)
+    # single-device avoids, one avoided-device-per-host, and a whole
+    # host block (fallback keeps a gateway): all bitwise == flat
+    sweeps = ([frozenset({{s}}) for s in range(K)]
+              + [frozenset({{h * dph for h in range(hosts)}}),
+                 frozenset(range(dph))])
+    for avoid in sweeps:
+        plan_a = make_plan(q, k, d, topology=Topology.two_level(hosts),
+                           gateway_avoid=avoid)
+        for router in ('all_to_all', 'ppermute'):
+            got = run(plan_a, router)
+            np.testing.assert_array_equal(
+                got, flat, err_msg=f"avoid={{sorted(avoid)}} {{router}}")
+    print('OK')
+""")
+
+
+@pytest.mark.parametrize("q,k,hosts", [(2, 4, 2), (2, 6, 3)])
+def test_gateway_failover_bitwise_sweep(q, k, hosts):
+    """Outputs are BITWISE equal to flat (hence to the engine oracle,
+    test_two_level_bitwise_identity) for EVERY gateway assignment —
+    gateway choice is pure routing policy."""
+    out = _run_subprocess(
+        _RUN_GATEWAY_SWEEP.format(q=q, k=k, hosts=hosts, d=2 * (k - 1)),
+        ndev=q * k)
+    assert "OK" in out
